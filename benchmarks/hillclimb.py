@@ -1,0 +1,187 @@
+"""§Perf hillclimb driver: named experiments over the three selected cells.
+
+Each experiment re-measures the cell with one change (hypothesis -> change ->
+measure), writing experiments/perf/<cell>__<name>.json. Run:
+
+    PYTHONPATH=src python benchmarks/hillclimb.py [--only smollm]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "perf")
+
+PURE_DP = (
+    ("batch", (("data", "model"), ("data",))),
+    ("heads", ()), ("kv_heads", ()), ("mlp", ()), ("vocab", ()),
+    ("expert", ()), ("ssm_inner", ()), ("ssm_heads", ()), ("kv_seq", ()),
+    ("__no_tp_fallback__", ((),)),
+)
+
+
+def lm_experiments():
+    from repro.configs import get_config, get_shape
+    from repro.launch.dryrun import measure_cell
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh()
+    shape = get_shape("train_4k")
+
+    cells = {
+        "smollm-135m": [
+            ("baseline", lambda c: c, {}),
+            # H1: 9 heads / 3 kv heads can't split the 16-way model axis ->
+            # attention is replicated 16x. A 135M model doesn't need TP at
+            # all: map batch over (data x model) = 256-way pure DP.
+            ("pure_dp", lambda c: dataclasses.replace(
+                c, sharding_overrides=PURE_DP), {}),
+            # H1b: same + FSDP so optimizer state shards over data
+            ("pure_dp_fsdp", lambda c: dataclasses.replace(
+                c, sharding_overrides=PURE_DP, fsdp=True), {}),
+            # H2: keep TP but recover the model axis via sequence-parallel
+            # attention compute (q-seq sharded on model).
+            ("seq_attn", lambda c: dataclasses.replace(
+                c, attn_seq_shard=True), {}),
+        ],
+        "jamba-1.5-large-398b": [
+            ("baseline", lambda c: c, {}),
+            # H1: remat=full replays the whole block forward in backward,
+            # repeating every TP all-reduce; policy "dots" keeps matmul
+            # outputs and skips most replayed collectives.
+            ("remat_dots", lambda c: dataclasses.replace(
+                c, remat_policy="dots"), {}),
+            ("remat_none", lambda c: dataclasses.replace(
+                c, remat_policy="none"), {}),
+            # H2: how much of the collective term is FSDP weight gathering?
+            # (diagnostic: TP-only does not fit HBM at 398B, but isolates
+            # the FSDP share of the all-gather bytes)
+            ("no_fsdp", lambda c: dataclasses.replace(c, fsdp=False), {}),
+            # H3: jamba's 9 attention layers have kv=8 < 16 -> their scores
+            # replicate on the model axis; sequence-parallel attention fixes.
+            ("seq_attn", lambda c: dataclasses.replace(
+                c, attn_seq_shard=True), {}),
+        ],
+        # generalization check: minicpm has 36 heads (36 % 16 != 0) — the
+        # same replicated-attention pathology as smollm, but at 2.7B the
+        # pure-DP mapping is wasteful; sequence-parallel attention is the fix.
+        "minicpm-2b": [
+            ("baseline", lambda c: c, {}),
+            ("seq_attn", lambda c: dataclasses.replace(
+                c, attn_seq_shard=True), {}),
+        ],
+    }
+    for arch, exps in cells.items():
+        for name, fn, kw in exps:
+            path = os.path.join(OUT, f"{arch}__train_4k__{name}.json")
+            if os.path.exists(path):
+                print(f"[hillclimb] cached {arch} {name}")
+                continue
+            cfg = fn(get_config(arch))
+            t0 = time.time()
+            rec = {"arch": arch, "shape": "train_4k", "mesh": "pod",
+                   "mesh_shape": dict(mesh.shape), "experiment": name,
+                   "variant": "roofline"}
+            try:
+                rec.update(measure_cell(cfg, shape, mesh,
+                                        roofline_variant=True, **kw))
+                rec["status"] = "ok"
+            except Exception as e:   # noqa
+                rec["status"] = f"FAILED: {e}"[:500]
+            rec["total_s"] = round(time.time() - t0, 1)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=2)
+            _report(rec)
+
+
+def ga_experiments():
+    import jax
+    from repro.ants import simulate_batch
+    from repro.configs.ants_netlogo import BOUNDS, CONFIG
+    from repro.evolution import NSGA2Config, init_island_state, make_epoch
+    from repro.explore import replicated_batch
+    from repro.kernels import ops as kops
+    from repro.launch.dryrun import collective_bytes
+    from repro.launch.mesh import make_production_mesh
+    from repro.runtime import sharding as shd
+
+    kops.set_dryrun(True)
+    mesh = make_production_mesh()
+    exps = [
+        ("baseline", CONFIG, 0),
+        # H1 (REFUTED, kept for the record): the chemical field dominates
+        # per-tick traffic -> bf16 halves it. Measurement showed the memory
+        # term lives in the ARCHIVE MERGE, not the simulation.
+        ("bf16_chem", dataclasses.replace(CONFIG, chem_dtype="bfloat16"), 0),
+        # H2: shrink the merge: each island contributes only its top-8
+        # individuals -> the O(pool^2) dominance pass shrinks ~16x.
+        ("merge_top8", CONFIG, 8),
+    ]
+    for name, ants_cfg, top_k in exps:
+        path = os.path.join(OUT, f"ants-island-ga__islands__{name}.json")
+        if os.path.exists(path):
+            print(f"[hillclimb] cached ants {name}")
+            continue
+        ga_cfg = NSGA2Config(mu=32, genome_dim=2, bounds=BOUNDS,
+                             n_objectives=3)
+        eval_fn = replicated_batch(
+            lambda keys, genomes: simulate_batch(ants_cfg, keys,
+                                                 genomes[:, 0],
+                                                 genomes[:, 1]), 5)
+        epoch = make_epoch(ga_cfg, eval_fn, lam=16, steps_per_epoch=1,
+                           merge_top_k=top_k)
+        t0 = time.time()
+        rec = {"arch": "ants-island-ga", "shape": "islands_2048",
+               "mesh": "pod", "mesh_shape": dict(mesh.shape),
+               "experiment": name, "variant": "production"}
+        import jax as _jax
+        with shd.use_mesh(mesh):
+            state_sds = _jax.eval_shape(
+                lambda k: init_island_state(ga_cfg, k, n_islands=2048,
+                                            archive_size=1024),
+                _jax.random.key(0))
+            compiled = _jax.jit(epoch).lower(state_sds).compile()
+        ca = compiled.cost_analysis() or {}
+        rec["cost_analysis"] = {
+            "flops": float(ca.get("flops", -1)),
+            "bytes_accessed": float(ca.get("bytes accessed", -1))}
+        rec["collectives"] = collective_bytes(compiled.as_text())
+        rec["status"] = "ok"
+        rec["total_s"] = round(time.time() - t0, 1)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+        _report(rec)
+
+
+def _report(rec):
+    if rec.get("status") != "ok":
+        print(f"[hillclimb] {rec['arch']} {rec['experiment']}: {rec['status']}")
+        return
+    ca = rec["cost_analysis"]
+    coll = sum(v * (2 if k == "all-reduce" else 1)
+               for k, v in rec["collectives"].items() if k != "count")
+    print(f"[hillclimb] {rec['arch']:22s} {rec['experiment']:14s} "
+          f"flops/dev={ca['flops']:.3e} bytes={ca['bytes_accessed']:.3e} "
+          f"coll(w)={coll:.3e} ({rec['total_s']}s)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    os.makedirs(OUT, exist_ok=True)
+    if args.only in ("", "smollm", "jamba", "lm"):
+        lm_experiments()
+    if args.only in ("", "ants", "ga"):
+        ga_experiments()
+
+
+if __name__ == "__main__":
+    main()

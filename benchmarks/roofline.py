@@ -1,0 +1,140 @@
+"""Roofline analysis from the dry-run artifacts (§Roofline of EXPERIMENTS.md).
+
+For each (arch x shape) cell the dry-run produces two artifacts:
+  <mesh>__<arch>__<shape>.json            production program (scans, grad
+                                          accumulation) — the runnability
+                                          record;
+  roofline__pod__<arch>__<shape>.json     exact-cost variant: truncated
+                                          UNROLLED stacks at 1 and 2 blocks,
+                                          linearly extrapolated to full depth
+                                          (XLA counts while bodies once; see
+                                          tests/test_roofline.py).
+
+This script consumes the roofline variant when present and derives:
+
+  compute term    = HLO_FLOPs_per_device / PEAK_FLOPS_BF16
+  memory term     = HLO_bytes_per_device / HBM_BW
+  collective term = collective_bytes_per_device / ICI_BW
+  bottleneck      = argmax(term)
+  MODEL_FLOPS     = 6 * N(_active) * tokens        (train shapes)
+  useful_frac     = MODEL_FLOPS / (HLO_FLOPs * n_devices)
+  MFU_bound       = MODEL_FLOPS / (n_dev * peak * max(term))
+
+Writes experiments/roofline.csv and prints a markdown table.
+"""
+from __future__ import annotations
+
+import csv
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16  # noqa: E402
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+OUT_CSV = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "roofline.csv")
+
+TOKENS = {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+          "decode_32k": 128, "long_500k": 1}
+
+
+def analyze_record(rec: dict) -> dict:
+    n_dev = 1
+    for v in rec.get("mesh_shape", {}).values():
+        n_dev *= v
+    ca = rec["cost_analysis"]
+    coll = rec.get("collectives", {})
+    # ring-algorithm traffic weights: an all-reduce moves ~2x its payload
+    # per device (reduce-scatter + all-gather); the others ~1x.
+    coll_bytes = sum(v * (2.0 if k == "all-reduce" else 1.0)
+                     for k, v in coll.items() if k != "count")
+    t_compute = ca["flops"] / PEAK_FLOPS_BF16
+    t_memory = ca["bytes_accessed"] / HBM_BW
+    t_coll = coll_bytes / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    t_max = max(terms.values())
+    out = {
+        "mesh": rec["mesh"], "arch": rec["arch"], "shape": rec["shape"],
+        "variant": rec.get("variant", "production"),
+        "devices": n_dev,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bottleneck": bottleneck,
+        "flops_per_dev": ca["flops"],
+        "coll_bytes_per_dev": coll_bytes,
+    }
+    tokens = TOKENS.get(rec["shape"], 0)
+    if rec["shape"].startswith("train") and rec.get("params_active"):
+        model_flops = 6 * rec["params_active"] * tokens
+        out["model_flops"] = model_flops
+        out["useful_flops_frac"] = model_flops / (ca["flops"] * n_dev) \
+            if ca["flops"] > 0 else 0.0
+        out["mfu_bound"] = model_flops / (n_dev * PEAK_FLOPS_BF16 * t_max) \
+            if t_max else 0.0
+    return out
+
+
+def load_all(dryrun_dir=DRYRUN_DIR, mesh="pod"):
+    """Prefer roofline-variant records; fall back to production ones."""
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir,
+                                              f"{mesh}__*.json"))):
+        rec = json.load(open(path))
+        roofline_path = os.path.join(dryrun_dir,
+                                     "roofline__" + os.path.basename(path))
+        if os.path.exists(roofline_path):
+            rr = json.load(open(roofline_path))
+            if rr.get("status") == "ok":
+                rec = rr
+        if rec.get("status") != "ok":
+            rows.append({"mesh": rec.get("mesh"), "arch": rec.get("arch"),
+                         "shape": rec.get("shape"),
+                         "bottleneck": rec.get("status", "?")})
+            continue
+        rows.append(analyze_record(rec))
+    return rows
+
+
+def main():
+    rows = load_all()
+    if not rows:
+        print("no dry-run artifacts; run repro.launch.dryrun --all "
+              "[--roofline]")
+        return
+    keys = ["mesh", "arch", "shape", "variant", "devices", "t_compute_s",
+            "t_memory_s", "t_collective_s", "bottleneck", "flops_per_dev",
+            "coll_bytes_per_dev", "model_flops", "useful_flops_frac",
+            "mfu_bound"]
+    os.makedirs(os.path.dirname(OUT_CSV), exist_ok=True)
+    with open(OUT_CSV, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=keys, extrasaction="ignore")
+        w.writeheader()
+        for r in rows:
+            w.writerow(r)
+    print("| arch | shape | t_comp(ms) | t_mem(ms) | t_coll(ms) | bound "
+          "| useful% | MFU-bound |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if "t_compute_s" not in r:
+            print(f"| {r['arch']} | {r['shape']} | - | - | - | "
+                  f"{r['bottleneck']} | - | - |")
+            continue
+        uf = r.get("useful_flops_frac")
+        mfu = r.get("mfu_bound")
+        uf_s = f"{uf:.1%}" if uf is not None else "-"
+        mfu_s = f"{mfu:.1%}" if mfu is not None else "-"
+        print(f"| {r['arch']} | {r['shape']} "
+              f"| {r['t_compute_s'] * 1e3:.2f} | {r['t_memory_s'] * 1e3:.2f} "
+              f"| {r['t_collective_s'] * 1e3:.2f} | {r['bottleneck']} "
+              f"| {uf_s} | {mfu_s} |")
+    print(f"\nwrote {OUT_CSV} ({len(rows)} cells)")
+
+
+if __name__ == "__main__":
+    main()

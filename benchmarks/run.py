@@ -1,0 +1,206 @@
+"""Benchmark harness — one benchmark per paper claim/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Each benchmark measures the
+steady state (post-compile) on this host; the paper-scale projections next to
+them come from the roofline artifacts (benchmarks/roofline.py).
+
+Paper claims covered:
+  ants_tick             the simulation workload itself (Fig 1/2 model)
+  ants_eval_throughput  §4.6: "200,000 individuals evaluated in one hour"
+  island_epoch          §4.6 island model end-to-end epoch
+  nsga2_dominance       §4.5 NSGA-II non-dominated sorting hot spot
+  nsga2_generation      §4.5 Listing 4 one generational step
+  workflow_submit       §2 engine overhead per delegated task
+  replication_median    §4.4 Listing 3 replication + median
+  lm_train_step         the 2026-scale "expensive task" (reduced smollm)
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def timeit(fn, *, warmup=2, iters=5):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6   # us
+
+
+def row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def bench_ants_tick():
+    from repro.ants import init_state, make_step
+    from repro.configs.ants_netlogo import REDUCED
+    n = 64
+    keys = jax.random.split(jax.random.key(0), n)
+    state = init_state(REDUCED, keys)
+    step = jax.jit(make_step(REDUCED))
+    d = jnp.full((n,), 0.5)
+    e = jnp.full((n,), 0.1)
+
+    def one():
+        nonlocal state
+        state = step(state, jnp.int32(1), d, e)
+        jax.block_until_ready(state.chem)
+
+    us = timeit(one)
+    row("ants_tick_64lanes", us, f"{n / (us / 1e6):.0f}_lane_ticks_per_s")
+
+
+def bench_ants_eval_throughput():
+    """The paper's 200k evals/hour claim, measured on this host."""
+    from repro.ants import simulate_batch
+    from repro.configs.ants_netlogo import REDUCED
+    n = 32
+    keys = jax.random.split(jax.random.key(0), n)
+    d = jax.random.uniform(jax.random.key(1), (n,)) * 99
+    e = jax.random.uniform(jax.random.key(2), (n,)) * 99
+
+    def one():
+        simulate_batch(REDUCED, keys, d, e).block_until_ready()
+
+    us = timeit(one, warmup=1, iters=3)
+    per_hour = n / (us / 1e6) * 3600
+    row("ants_eval_throughput", us / n,
+        f"{per_hour:.0f}_evals_per_hour_single_CPU_core")
+
+
+def bench_island_epoch():
+    from repro.ants import simulate_batch
+    from repro.configs.ants_netlogo import BOUNDS, REDUCED
+    from repro.evolution import NSGA2Config, init_island_state, make_epoch
+    from repro.explore import replicated_batch
+    cfg = NSGA2Config(mu=8, genome_dim=2, bounds=BOUNDS, n_objectives=3)
+    eval_fn = replicated_batch(
+        lambda k, g: simulate_batch(REDUCED, k, g[:, 0], g[:, 1]), 3)
+    epoch = jax.jit(make_epoch(cfg, eval_fn, lam=8, steps_per_epoch=1))
+    state = init_island_state(cfg, jax.random.key(0), n_islands=4,
+                              archive_size=64)
+
+    def one():
+        nonlocal state
+        state = epoch(state)
+        jax.block_until_ready(state.archive.objectives)
+
+    us = timeit(one, warmup=1, iters=3)
+    evals = 4 * 8 * 3   # islands x lam x replicates per epoch (steady state)
+    row("island_epoch_4islands", us, f"{evals / (us / 1e6):.0f}_sim_runs_per_s")
+
+
+def bench_nsga2_dominance():
+    from repro.kernels import ref
+    n, m = 4096, 3
+    f = jax.random.uniform(jax.random.key(0), (n, m), jnp.float32)
+    fn = jax.jit(ref.dominated_counts_ref)
+
+    def one():
+        fn(f).block_until_ready()
+
+    us = timeit(one)
+    row("nsga2_dominance_4096", us,
+        f"{n * n / (us / 1e6) / 1e9:.2f}_Gpairs_per_s")
+
+
+def bench_nsga2_generation():
+    from repro.evolution import NSGA2Config
+    from repro.evolution.ga import evaluate_initial, init_state, make_step
+    cfg = NSGA2Config(mu=64, genome_dim=4, bounds=((0., 1.),) * 4,
+                      n_objectives=3)
+
+    def zdt(keys, genomes):
+        f1 = genomes[:, 0]
+        return jnp.stack([f1, 1 - f1, (genomes ** 2).sum(1)], 1)
+
+    state = evaluate_initial(cfg, init_state(cfg, jax.random.key(0)), zdt)
+    step = jax.jit(make_step(cfg, zdt, lam=64))
+
+    def one():
+        nonlocal state
+        state = step(state)
+        jax.block_until_ready(state.objectives)
+
+    us = timeit(one)
+    row("nsga2_generation_mu64", us, f"{64 / (us / 1e6):.0f}_offspring_per_s")
+
+
+def bench_workflow_submit():
+    from repro.core import Context, LocalEnvironment, PyTask, Val
+    env = LocalEnvironment()
+    t = PyTask("noop", lambda ctx: {"y": ctx["x"]}, inputs=(Val("x"),),
+               outputs=(Val("y"),))
+
+    def one():
+        for _ in range(100):
+            env.submit(t, Context(x=1.0))
+
+    us = timeit(one) / 100
+    row("workflow_submit", us, f"{1e6 / us:.0f}_tasks_per_s")
+
+
+def bench_replication_median():
+    from repro.ants import simulate_batch
+    from repro.configs.ants_netlogo import REDUCED
+    from repro.explore import replicated_batch
+    eval_fn = replicated_batch(
+        lambda k, g: simulate_batch(REDUCED, k, g[:, 0], g[:, 1]), 5)
+    keys = jax.random.split(jax.random.key(0), 4)
+    genomes = jax.random.uniform(jax.random.key(1), (4, 2)) * 99
+    jfn = jax.jit(eval_fn)
+
+    def one():
+        jfn(keys, genomes).block_until_ready()
+
+    us = timeit(one, warmup=1, iters=3)
+    row("replication_median_5x", us, f"{20 / (us / 1e6):.0f}_sim_runs_per_s")
+
+
+def bench_lm_train_step():
+    import dataclasses
+    from repro.configs import get_config
+    from repro.models import build
+    from repro.train import OptimizerConfig, init_train_state, make_train_step
+    cfg = dataclasses.replace(get_config("smollm-135m", reduced=True),
+                              dtype="float32", use_flash_kernel=False)
+    model = build(cfg)
+    state, _ = init_train_state(model, jax.random.key(0))
+    step = jax.jit(make_train_step(model, OptimizerConfig(), 1))
+    b, s = 4, 128
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (b, s + 1), 0,
+                                          cfg.vocab_size)}
+
+    def one():
+        nonlocal state
+        state, m = step(state, batch)
+        jax.block_until_ready(m["loss"])
+
+    us = timeit(one, warmup=1, iters=3)
+    row("lm_train_step_reduced", us,
+        f"{b * s / (us / 1e6):.0f}_tokens_per_s_single_CPU_core")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_ants_tick()
+    bench_ants_eval_throughput()
+    bench_island_epoch()
+    bench_nsga2_dominance()
+    bench_nsga2_generation()
+    bench_workflow_submit()
+    bench_replication_median()
+    bench_lm_train_step()
+
+
+if __name__ == "__main__":
+    main()

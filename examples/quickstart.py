@@ -1,0 +1,68 @@
+"""Quickstart — the paper's Listings 2 & 3 in this framework.
+
+Embeds the ants model as a task, runs it once with default parameters, then
+replicates it over 5 seeds and reports the median of each objective.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.ants import simulate
+from repro.configs.ants_netlogo import REDUCED
+from repro.core import (Capsule, JaxTask, PyTask, ToStringHook, Val,
+                        aggregate, explore, puzzle)
+from repro.explore import SeedSampling, StatisticTask, median
+
+# ---- Listing 2: wrap the model in a task -----------------------------------
+gDiffusionRate = Val("gDiffusionRate", float)
+gEvaporationRate = Val("gEvaporationRate", float)
+seed = Val("seed", int)
+food1, food2, food3 = (Val(f"food{i}", float) for i in (1, 2, 3))
+
+
+def ants_fn(ctx):
+    obj = simulate(REDUCED, jax.random.key(int(ctx["seed"])),
+                   float(ctx["gDiffusionRate"]),
+                   float(ctx["gEvaporationRate"]))
+    return {"food1": float(obj[0]), "food2": float(obj[1]),
+            "food3": float(obj[2])}
+
+
+ants = PyTask("ants", ants_fn,
+              inputs=(gDiffusionRate, gEvaporationRate, seed),
+              outputs=(food1, food2, food3),
+              defaults={"seed": 42, "gPopulation": 125.0,
+                        "gDiffusionRate": 50.0, "gEvaporationRate": 10.0})
+
+print("== Listing 2: single run ==")
+displayHook = ToStringHook(food1, food2, food3)
+ex = puzzle(Capsule(ants).hook(displayHook))
+ex.run()
+
+# ---- Listing 3: replications + median ---------------------------------------
+print("\n== Listing 3: 5 replications + median ==")
+medNumberFood1 = Val("medNumberFood1", float)
+medNumberFood2 = Val("medNumberFood2", float)
+medNumberFood3 = Val("medNumberFood3", float)
+
+statistic = StatisticTask("statistic", [
+    (food1, medNumberFood1, median),
+    (food2, medNumberFood2, median),
+    (food3, medNumberFood3, median),
+])
+
+modelCapsule = Capsule(ants)
+statisticCapsule = Capsule(statistic).hook(
+    ToStringHook(medNumberFood1, medNumberFood2, medNumberFood3))
+seedFactor = SeedSampling(seed, 5, seed=7)   # seed in (UniformDistribution take 5)
+head = Capsule(PyTask("head", lambda ctx: {}))
+
+replicateModel = (puzzle(head) >> explore(seedFactor) >> modelCapsule
+                  >> aggregate() >> statisticCapsule)
+replicateModel.run()
+print("\nDone. Next: examples/calibrate_ants.py (Listings 4-5).")

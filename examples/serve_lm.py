@@ -1,0 +1,32 @@
+"""Batched serving: prefill a batch of prompts, decode with greedy/sampled
+tokens, print throughput.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch smollm-135m
+    PYTHONPATH=src python examples/serve_lm.py --arch whisper-base  # enc-dec
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import serve_once
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+    out = serve_once(args.arch, reduced=True, batch=args.batch,
+                     prompt_len=args.prompt_len, new_tokens=args.new_tokens,
+                     temperature=args.temperature)
+    print("generated token ids:")
+    print(out)
+
+
+if __name__ == "__main__":
+    main()

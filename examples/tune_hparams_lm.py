@@ -1,0 +1,68 @@
+"""The paper's "parameter tuning" applied to the 2026-scale task: explore LM
+training hyper-parameters through the workflow engine.
+
+A Sobol design over (learning-rate, weight-decay) fans out through an
+exploration transition; each sample trains a tiny LM for a handful of steps
+(the task), and an aggregation collects the losses into a ranking.
+
+    PYTHONPATH=src python examples/tune_hparams_lm.py --samples 4
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import Capsule, PyTask, Val, aggregate, explore, puzzle
+from repro.explore import SobolSampling
+from repro.launch.train import train_loop
+from repro.train.optimizer import OptimizerConfig
+
+log_lr = Val("log_lr", float)
+wd = Val("weight_decay", float)
+final_loss = Val("final_loss", float)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--samples", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=12)
+    ap.add_argument("--arch", default="smollm-135m")
+    args = ap.parse_args()
+
+    def probe(ctx):
+        lr = 10.0 ** float(ctx["log_lr"])
+        _, losses = train_loop(args.arch, reduced=True, steps=args.steps,
+                               batch=2, seq=32, lr=lr, log_every=10 ** 9,
+                               printer=lambda *a, **k: None)
+        return {"final_loss": float(np.mean(losses[-3:]))}
+
+    def report(ctx):
+        rows = sorted(zip(np.atleast_1d(ctx["log_lr"]),
+                          np.atleast_1d(ctx["weight_decay"]),
+                          np.atleast_1d(ctx["final_loss"])),
+                      key=lambda r: r[2])
+        print(f"\n{'log10(lr)':>10} {'wd':>6} {'loss':>8}")
+        for llr, w, l in rows:
+            print(f"{llr:10.2f} {w:6.3f} {l:8.4f}")
+        best = rows[0]
+        print(f"\nbest: lr=10^{best[0]:.2f}={10**best[0]:.2e} wd={best[1]:.3f}"
+              f" loss={best[2]:.4f}")
+        return {"best_log_lr": float(best[0])}
+
+    design = SobolSampling({log_lr: (-4.0, -1.5), wd: (0.0, 0.2)},
+                           args.samples, seed=0)
+    head = Capsule(PyTask("head", lambda ctx: {}))
+    probe_c = Capsule(PyTask("probe", probe, inputs=(log_lr, wd),
+                             outputs=(final_loss,)))
+    report_c = Capsule(PyTask("report", report,
+                              outputs=(Val("best_log_lr", float),)))
+    wf = (puzzle(head) >> explore(design) >> probe_c
+          >> aggregate() >> report_c)
+    wf.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.ants.model import (AntsState, simulate, simulate_batch,  # noqa
+                              food_sources, nest_mask, init_state, make_step)

@@ -1,0 +1,146 @@
+"""Fault-tolerant checkpointing: sharded npz + JSON manifest, atomic renames,
+optional async writes, and reshard-on-restore (elastic mesh changes).
+
+Layout:
+  <dir>/step_<n>/manifest.json       tree structure, shapes, dtypes
+  <dir>/step_<n>/arrays.npz          flat {index: ndarray}
+  <dir>/step_<n>/.complete           commit marker (atomic rename target)
+
+Restore never requires the same mesh: arrays come back as numpy and are
+re-placed with ``jax.device_put(x, sharding)`` for whatever mesh the new job
+runs on — this is the elastic-scaling path after losing a pod.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+# dtypes numpy's npz format cannot round-trip natively -> stored as uint views
+_VIEW_ENCODED = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+                 "float8_e5m2": np.uint8}
+
+
+def _encode(x):
+    """jax/np array -> (npz-safe ndarray, dtype tag)."""
+    if isinstance(x, jax.Array) and jnp.issubdtype(x.dtype,
+                                                   jax.dtypes.prng_key):
+        return np.asarray(jax.random.key_data(x)), "prngkey"
+    a = np.asarray(jax.device_get(x))
+    tag = str(a.dtype)
+    if tag in _VIEW_ENCODED:
+        return a.view(_VIEW_ENCODED[tag]), tag
+    return a, tag
+
+
+def _decode(a, tag):
+    if tag == "prngkey":
+        return jax.random.wrap_key_data(jnp.asarray(a))
+    if tag in _VIEW_ENCODED:
+        return a.view(ml_dtypes.bfloat16 if tag == "bfloat16"
+                      else getattr(ml_dtypes, tag))
+    return a
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree.flatten(tree)
+    return flat, treedef
+
+
+def save(directory: str, step: int, tree: Any, *, blocking: bool = True):
+    """Atomically persist a pytree of arrays. Returns the commit thread."""
+    flat, treedef = _flatten_with_paths(tree)
+    encoded = [_encode(x) for x in flat]
+    host = [e[0] for e in encoded]
+    meta = {
+        "step": step,
+        "treedef": str(treedef),
+        "num_leaves": len(flat),
+        "shapes": [list(x.shape) for x in host],
+        "dtypes": [e[1] for e in encoded],
+    }
+
+    def commit():
+        final = os.path.join(directory, f"step_{step:08d}")
+        # unique tmp per writer: concurrent saves of the same step (async +
+        # final) must not clobber each other's staging dirs
+        tmp = final + f".tmp{os.getpid()}_{threading.get_ident()}"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{str(i): a for i, a in enumerate(host)})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(meta, f)
+        open(os.path.join(tmp, ".complete"), "w").close()
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    if blocking:
+        commit()
+        return None
+    t = threading.Thread(target=commit, daemon=True)
+    t.start()
+    return t
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and ".tmp" not in name:
+            if os.path.exists(os.path.join(directory, name, ".complete")):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, like: Any, *, shardings: Any = None):
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs). If ``shardings`` is given (same structure), arrays are
+    device_put with those shardings — the mesh may differ from save time."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    if not os.path.exists(os.path.join(path, ".complete")):
+        raise FileNotFoundError(f"incomplete or missing checkpoint: {path}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat_like, treedef = jax.tree.flatten(like)
+    assert len(flat_like) == meta["num_leaves"], (
+        f"checkpoint has {meta['num_leaves']} leaves, expected "
+        f"{len(flat_like)} — config/arch mismatch?")
+    arrays = []
+    for i, leaf in enumerate(flat_like):
+        a = _decode(data[str(i)], meta["dtypes"][i])
+        if meta["dtypes"][i] != "prngkey":
+            expect = tuple(leaf.shape)
+            assert tuple(a.shape) == expect, (i, a.shape, expect)
+        arrays.append(a)
+    tree = jax.tree.unflatten(treedef, arrays)
+    if shardings is not None:
+        tree = jax.tree.map(jax.device_put, tree, shardings)
+    else:
+        tree = jax.tree.map(
+            lambda a, l: a if str(getattr(l, "dtype", "")).startswith("key")
+            else jax.numpy.asarray(a, dtype=l.dtype), tree, like)
+    return tree
+
+
+def prune(directory: str, keep: int = 3):
+    """Keep the newest `keep` complete checkpoints (bounded disk)."""
+    if not os.path.isdir(directory):
+        return
+    steps = sorted(
+        int(n.split("_")[1]) for n in os.listdir(directory)
+        if n.startswith("step_") and ".tmp" not in n
+        and os.path.exists(os.path.join(directory, n, ".complete")))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"))

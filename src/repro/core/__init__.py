@@ -1,0 +1,12 @@
+"""The paper's primary contribution: a workflow engine for distributed model
+exploration — tasks, dataflow, hooks, environments, and the DSL."""
+from repro.core.prototype import Val, Context                      # noqa
+from repro.core.task import Task, PyTask, JaxTask, TaskError       # noqa
+from repro.core.workflow import Capsule, Workflow, Transition      # noqa
+from repro.core.hook import (Hook, ToStringHook, DisplayHook,      # noqa
+                             CSVHook, SavePopulationHook, CheckpointHook)
+from repro.core.source import (Source, ConstantSource, CSVSource,  # noqa
+                               FunctionSource)
+from repro.core.environment import (Environment, LocalEnvironment,  # noqa
+                                    MeshEnvironment, EGIEnvironment)
+from repro.core.dsl import Puzzle, puzzle, explore, aggregate      # noqa

@@ -1,0 +1,106 @@
+"""Hooks — "Tasks are mute pieces of software ... OpenMOLE introduces a
+mechanism called Hooks to save or display results generated on remote
+environments" (paper §4.3). Hooks run host-side after a capsule completes.
+"""
+from __future__ import annotations
+
+import csv
+import json
+import os
+from typing import Any, Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core.prototype import Context, Val
+
+
+class Hook:
+    def __call__(self, context: Context) -> None:
+        raise NotImplementedError
+
+
+class ToStringHook(Hook):
+    """Paper Listing 2: display selected output values."""
+
+    def __init__(self, *vals: Val, printer: Callable = print):
+        self.vals = vals
+        self.printer = printer
+        self.seen = []
+
+    def __call__(self, context: Context) -> None:
+        msg = ", ".join(f"{v.name}={context.get(v.name)}" for v in self.vals)
+        self.seen.append(msg)
+        self.printer(msg)
+
+
+class DisplayHook(Hook):
+    """Paper Listing 4: DisplayHook("Generation ${generation}")."""
+
+    def __init__(self, template: str, printer: Callable = print):
+        self.template = template
+        self.printer = printer
+
+    def __call__(self, context: Context) -> None:
+        out = self.template
+        for k, v in context.items():
+            out = out.replace("${" + k + "}", str(v))
+        self.printer(out)
+
+
+class CSVHook(Hook):
+    """Append selected vals as a CSV row (AppendToCSVFileHook analogue)."""
+
+    def __init__(self, path: str, vals: Sequence[Val]):
+        self.path = path
+        self.vals = vals
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        if not os.path.exists(path):
+            with open(path, "w", newline="") as f:
+                csv.writer(f).writerow([v.name for v in vals])
+
+    def __call__(self, context: Context) -> None:
+        with open(self.path, "a", newline="") as f:
+            csv.writer(f).writerow(
+                [np.asarray(context[v.name]).tolist() for v in self.vals])
+
+
+class SavePopulationHook(Hook):
+    """Paper Listings 4/5: persist the GA population/Pareto archive each
+    generation under a directory (one CSV per generation + latest.json)."""
+
+    def __init__(self, directory: str):
+        self.directory = directory
+        os.makedirs(directory, exist_ok=True)
+        self.generations_saved = 0
+
+    def __call__(self, context: Context) -> None:
+        gen = int(np.asarray(context.get("generation", self.generations_saved)))
+        genomes = np.asarray(context["genomes"])
+        objectives = np.asarray(context["objectives"])
+        path = os.path.join(self.directory, f"population_{gen}.csv")
+        with open(path, "w", newline="") as f:
+            w = csv.writer(f)
+            w.writerow([f"g{i}" for i in range(genomes.shape[1])]
+                       + [f"o{i}" for i in range(objectives.shape[1])])
+            for g, o in zip(genomes, objectives):
+                w.writerow(list(g) + list(o))
+        with open(os.path.join(self.directory, "latest.json"), "w") as f:
+            json.dump({"generation": gen, "path": path}, f)
+        self.generations_saved += 1
+
+
+class CheckpointHook(Hook):
+    """Persist an arbitrary pytree val through repro.checkpoint."""
+
+    def __init__(self, directory: str, val: Val, every: int = 1):
+        from repro import checkpoint
+        self._ckpt = checkpoint
+        self.directory = directory
+        self.val = val
+        self.every = every
+        self.calls = 0
+
+    def __call__(self, context: Context) -> None:
+        if self.calls % self.every == 0:
+            self._ckpt.save(self.directory, self.calls, context[self.val.name])
+        self.calls += 1

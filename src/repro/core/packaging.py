@@ -1,0 +1,54 @@
+"""Hermetic task packaging — the CARE/CDE analogue (paper §3).
+
+CARE ships a syscall-complete archive so a job re-executes bit-identically on
+any grid node. Inside a TPU program there is no syscall surface; the hermetic
+unit is the *lowered computation itself*. We package tasks as serialized
+``jax.export`` artifacts (StableHLO + input/output treedefs + shapes):
+
+- re-execution needs no model code, only the bundle (zero-deployment),
+- the computation is pinned bit-exactly (provenance: stronger than CARE's
+  library-version pinning — see DESIGN.md §2),
+- bundles are forward-compatible across jax releases per StableHLO
+  compatibility guarantees.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import export as jexport
+
+
+def package(fn: Callable, args_sds: Sequence[Any], path: str,
+            *, name: str = "task") -> str:
+    """Lower+export fn at the given ShapeDtypeStructs; write a bundle dir."""
+    os.makedirs(path, exist_ok=True)
+    exported = jexport.export(jax.jit(fn))(*args_sds)
+    blob = exported.serialize()
+    with open(os.path.join(path, "computation.bin"), "wb") as f:
+        f.write(blob)
+    meta = {
+        "name": name,
+        "in_avals": [str(a) for a in exported.in_avals],
+        "out_avals": [str(a) for a in exported.out_avals],
+        "platforms": list(exported.platforms),
+        "nbytes": len(blob),
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    return path
+
+
+def load(path: str) -> Callable:
+    """Rehydrate a packaged task as a callable (no source code needed)."""
+    with open(os.path.join(path, "computation.bin"), "rb") as f:
+        exported = jexport.deserialize(f.read())
+    return jax.jit(exported.call)
+
+
+def manifest(path: str) -> dict:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)

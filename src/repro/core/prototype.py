@@ -1,0 +1,54 @@
+"""Typed dataflow variables — OpenMOLE's ``Val[T]``.
+
+A Val names a slot in the dataflow Context. Tasks declare the Vals they
+consume/produce; the workflow engine type-checks the wiring before running
+(the paper: "it denotes all the types and data used within the workflow, as
+well as their origin").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Val:
+    name: str
+    dtype: Optional[type] = None      # python/numpy scalar type or None (any)
+    shape: Optional[Tuple[int, ...]] = None
+
+    def __repr__(self):
+        t = f":{self.dtype.__name__}" if self.dtype else ""
+        return f"Val({self.name}{t})"
+
+    def check(self, value: Any) -> bool:
+        if self.dtype is None:
+            return True
+        if self.dtype in (int, float, bool, str):
+            try:
+                if self.dtype is float:
+                    return not isinstance(value, (str, bytes))
+                return isinstance(value, self.dtype) or (
+                    hasattr(value, "dtype") and value.shape == ())
+            except Exception:
+                return False
+        return isinstance(value, self.dtype)
+
+
+class Context(dict):
+    """The dataflow context: {val_name: value}. Tasks read inputs from and
+    write outputs to Contexts; transitions move Contexts between capsules."""
+
+    def restrict(self, vals) -> "Context":
+        return Context({v.name: self[v.name] for v in vals})
+
+    def merged(self, other) -> "Context":
+        out = Context(self)
+        out.update(other)
+        return out
+
+    def __getattr__(self, name):
+        try:
+            return self[name]
+        except KeyError as e:
+            raise AttributeError(name) from e

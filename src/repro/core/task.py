@@ -1,0 +1,95 @@
+"""Tasks — "mute pieces of software ... compute some output data from their
+input data. That's what guarantees that their execution can be delegated to
+other machines" (paper §4.3).
+
+- ``Task``: declared inputs/outputs (Vals) + defaults + a pure function
+  Context -> dict. The engine enforces that outputs match the declaration
+  (task purity is checked, not assumed).
+- ``JaxTask``: the function is jit-compiled and dispatched through the
+  workflow's Environment (delegation); batched exploration uses vmap lanes.
+- ``PyTask``: host-side python (file IO, plotting) — the analogue of
+  OpenMOLE's ScalaTask running locally; eligible for speculative
+  resubmission on environments that support it.
+- ``StatisticTask`` lives in repro.explore.statistics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+
+from repro.core.prototype import Context, Val
+
+
+class TaskError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class Task:
+    name: str
+    fn: Callable[[Context], Dict[str, Any]]
+    inputs: Tuple[Val, ...] = ()
+    outputs: Tuple[Val, ...] = ()
+    defaults: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    kind: str = "py"                 # py | jax
+
+    def prepare(self, context: Context) -> Context:
+        ctx = Context(self.defaults)
+        ctx.update(context)
+        missing = [v.name for v in self.inputs if v.name not in ctx]
+        if missing:
+            raise TaskError(f"task {self.name}: missing inputs {missing}")
+        return ctx
+
+    def validate_outputs(self, out: Dict[str, Any]) -> Context:
+        if not isinstance(out, dict):
+            raise TaskError(f"task {self.name}: fn must return a dict")
+        missing = [v.name for v in self.outputs if v.name not in out]
+        if missing:
+            raise TaskError(f"task {self.name}: missing outputs {missing}")
+        for v in self.outputs:
+            if not v.check(out[v.name]):
+                raise TaskError(
+                    f"task {self.name}: output {v.name} failed type check "
+                    f"({type(out[v.name])} vs {v.dtype})")
+        return Context(out)
+
+    def run(self, context: Context) -> Context:
+        ctx = self.prepare(context)
+        return self.validate_outputs(self.fn(ctx))
+
+    # DSL sugar ------------------------------------------------------------
+    def set(self, **defaults) -> "Task":
+        d = dict(self.defaults)
+        d.update(defaults)
+        return dataclasses.replace(self, defaults=d)
+
+
+def PyTask(name, fn, inputs=(), outputs=(), defaults=None) -> Task:
+    return Task(name=name, fn=fn, inputs=tuple(inputs), outputs=tuple(outputs),
+                defaults=dict(defaults or {}), kind="py")
+
+
+def JaxTask(name, fn, inputs=(), outputs=(), defaults=None,
+            donate=()) -> Task:
+    """fn: (Context of arrays) -> dict of arrays; jit-compiled once per
+    environment+shape. The callable receives keyword args named after the
+    declared inputs (so it traces cleanly)."""
+    input_names = tuple(v.name for v in inputs)
+    output_names = tuple(v.name for v in outputs)
+
+    def wrapper(ctx: Context) -> Dict[str, Any]:
+        args = {n: ctx[n] for n in input_names}
+        out = fn(**args)
+        if not isinstance(out, dict):
+            if len(output_names) != 1:
+                raise TaskError(f"task {name}: fn returned non-dict for "
+                                f"{len(output_names)} outputs")
+            out = {output_names[0]: out}
+        return out
+
+    return Task(name=name, fn=wrapper, inputs=tuple(inputs),
+                outputs=tuple(outputs), defaults=dict(defaults or {}),
+                kind="jax")

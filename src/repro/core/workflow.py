@@ -1,0 +1,184 @@
+"""Workflow DAG + execution engine.
+
+"A workflow is a set of tasks linked with each other through transitions ...
+Each task produces outputs returned to the dataflow and transmitted to the
+input of consecutive tasks" (paper §2.1).
+
+Semantics implemented:
+- Capsule: scheduling slot around a Task, with hooks and an optional
+  per-capsule environment override (``on``) — Listing 5's ``island on env``.
+- Transitions: simple (1 context -> 1), exploration (1 -> N via a Sampling),
+  aggregation (N -> 1 with stacked values).
+- Execution: topological order; each capsule consumes a *list* of contexts
+  and emits a list. Vectorizable fan-outs are delegated to
+  ``environment.map_explore`` (mesh lanes); everything else runs through
+  ``environment.submit`` (with retry/speculation).
+- Output contexts are the union of input and task outputs (dataflow
+  propagation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.environment import Environment, LocalEnvironment
+from repro.core.hook import Hook
+from repro.core.prototype import Context, Val
+from repro.core.task import Task
+
+
+class Capsule:
+    _ids = itertools.count()
+
+    def __init__(self, task: Task, hooks: Sequence[Hook] = (),
+                 environment: Optional[Environment] = None):
+        self.task = task
+        self.hooks = list(hooks)
+        self.environment = environment
+        self.id = next(Capsule._ids)
+
+    def hook(self, h: Hook) -> "Capsule":
+        self.hooks.append(h)
+        return self
+
+    def on(self, env: Environment) -> "Capsule":
+        self.environment = env
+        return self
+
+    def __repr__(self):
+        return f"Capsule({self.task.name})"
+
+    # DSL: a >> b adds a simple transition inside an implicit builder
+    def __rshift__(self, other):
+        from repro.core.dsl import Puzzle
+        return Puzzle.from_capsule(self) >> other
+
+
+@dataclasses.dataclass
+class Transition:
+    src: Capsule
+    dst: Capsule
+    kind: str = "simple"              # simple | exploration | aggregation
+    sampling: Any = None              # explore.sampling.Sampling
+    condition: Optional[Callable[[Context], bool]] = None
+
+
+class Workflow:
+    def __init__(self, name: str = "workflow"):
+        self.name = name
+        self.capsules: List[Capsule] = []
+        self.transitions: List[Transition] = []
+
+    def add(self, capsule: Capsule) -> Capsule:
+        if capsule not in self.capsules:
+            self.capsules.append(capsule)
+        return capsule
+
+    def connect(self, src: Capsule, dst: Capsule, kind: str = "simple",
+                sampling=None, condition=None) -> None:
+        self.add(src)
+        self.add(dst)
+        self.transitions.append(Transition(src, dst, kind, sampling,
+                                           condition))
+
+    # ------------------------------------------------------------------ dag
+    def _topo_order(self) -> List[Capsule]:
+        indeg = {c: 0 for c in self.capsules}
+        for t in self.transitions:
+            indeg[t.dst] += 1
+        order, frontier = [], [c for c, d in indeg.items() if d == 0]
+        while frontier:
+            c = frontier.pop(0)
+            order.append(c)
+            for t in self.transitions:
+                if t.src is c:
+                    indeg[t.dst] -= 1
+                    if indeg[t.dst] == 0:
+                        frontier.append(t.dst)
+        if len(order) != len(self.capsules):
+            raise ValueError(f"workflow {self.name}: cycle detected")
+        return order
+
+    def validate(self) -> List[str]:
+        """Static wiring check: every declared input must be satisfiable by
+        an upstream output, a default, a sampling, or the initial context.
+        Returns a list of warnings (empty = clean)."""
+        warnings = []
+        producers: Dict[str, List[str]] = {}
+        for t in self.transitions:
+            for v in t.src.task.outputs:
+                producers.setdefault(v.name, []).append(t.src.task.name)
+            if t.sampling is not None:
+                for v in t.sampling.provides():
+                    producers.setdefault(v.name, []).append("sampling")
+        roots = {c for c in self.capsules
+                 if not any(t.dst is c for t in self.transitions)}
+        for c in self.capsules:
+            if c in roots:
+                continue
+            for v in c.task.inputs:
+                if v.name not in producers and v.name not in c.task.defaults:
+                    warnings.append(
+                        f"{c.task.name}: input {v.name} has no producer")
+        return warnings
+
+    # ------------------------------------------------------------------ run
+    def run(self, initial: Optional[Context] = None,
+            environment: Optional[Environment] = None
+            ) -> Dict[Capsule, List[Context]]:
+        env = environment or LocalEnvironment()
+        initial = Context(initial or {})
+        order = self._topo_order()
+        inbox: Dict[Capsule, List[Context]] = {c: [] for c in self.capsules}
+        for c in order:
+            if not any(t.dst is c for t in self.transitions):
+                inbox[c].append(initial)
+        results: Dict[Capsule, List[Context]] = {}
+        for c in order:
+            contexts = inbox[c]
+            cenv = c.environment or env
+            if len(contexts) > 1 and c.task.kind == "jax":
+                outs = cenv.map_explore(c.task, contexts)
+            else:
+                outs = [cenv.submit(c.task, ctx) for ctx in contexts]
+            merged = [ctx.merged(out) for ctx, out in zip(contexts, outs)]
+            for ctx in merged:
+                for h in c.hooks:
+                    h(ctx)
+            results[c] = merged
+            for t in self.transitions:
+                if t.src is not c:
+                    continue
+                flowing = [m for m in merged
+                           if t.condition is None or t.condition(m)]
+                if t.kind == "simple":
+                    inbox[t.dst].extend(flowing)
+                elif t.kind == "exploration":
+                    for m in flowing:
+                        for sample in t.sampling.contexts(m):
+                            inbox[t.dst].append(m.merged(sample))
+                elif t.kind == "aggregation":
+                    inbox[t.dst].append(_aggregate(flowing))
+                else:
+                    raise ValueError(t.kind)
+        return results
+
+
+def _aggregate(contexts: Sequence[Context]) -> Context:
+    """N contexts -> 1 with values stacked into lists (arrays left to
+    StatisticTask to reduce)."""
+    import numpy as np
+    if not contexts:
+        return Context()
+    keys = set(contexts[0])
+    for c in contexts[1:]:
+        keys &= set(c)
+    out = Context()
+    for k in keys:
+        vals = [c[k] for c in contexts]
+        try:
+            out[k] = np.stack([np.asarray(v) for v in vals])
+        except Exception:
+            out[k] = vals
+    return out

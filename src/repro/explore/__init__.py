@@ -1,0 +1,5 @@
+from repro.explore.sampling import (Sampling, GridSampling, UniformSampling,  # noqa
+                                    LHSSampling, SobolSampling, SeedSampling,
+                                    CrossSampling)
+from repro.explore.statistics import StatisticTask, median, mean, std, q  # noqa
+from repro.explore.replication import Replicate, replicated, replicated_batch  # noqa

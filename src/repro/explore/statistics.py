@@ -1,0 +1,38 @@
+"""StatisticTask (paper Listing 3): reduce replicated stochastic outputs to
+statistical descriptors (median/mean/std/quantiles)."""
+from __future__ import annotations
+
+from typing import Callable, Dict, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.prototype import Context, Val
+from repro.core.task import PyTask, Task
+
+median = np.median
+mean = np.mean
+std = np.std
+
+
+def q(p: float) -> Callable:
+    return lambda a, axis=0: np.quantile(a, p, axis=axis)
+
+
+def StatisticTask(name: str = "statistic",
+                  statistics: Sequence[Tuple[Val, Val, Callable]] = ()) -> Task:
+    """statistics: (input val holding stacked replicates, output val,
+    reducer) — mirrors `statistics += (food1, medNumberFood1, median)`."""
+
+    stats = tuple(statistics)
+
+    def fn(ctx: Context) -> Dict[str, float]:
+        out = {}
+        for src, dst, red in stats:
+            arr = np.asarray(ctx[src.name])
+            out[dst.name] = float(red(arr, axis=0)) if arr.ndim <= 1 \
+                else np.asarray(red(arr, axis=0))
+        return out
+
+    return PyTask(name, fn,
+                  inputs=tuple(s[0] for s in stats),
+                  outputs=tuple(s[1] for s in stats))

@@ -1,0 +1,69 @@
+"""Pairwise Pareto-dominance count Pallas kernel — the O(N^2) hot spot of
+NSGA-II non-dominated sorting at the paper's 200k-individual archive scale.
+
+dominated_count[i] = #{ j active : F_j dominates F_i }
+  where "j dominates i"  <=>  all(F_j <= F_i) and any(F_j < F_i)   (minimize).
+
+Grid = (num_i_blocks, num_j_blocks), j innermost/sequential; the per-i-block
+i32 counter lives in VMEM scratch across j iterations. Objectives are tiny
+(M <= 8), so blocks are (block_i, M) rows vs (block_j, M) columns:
+VMEM = 2 * block * M * 4 B + block_i * 4 B ≈ 17 KB at block=512, M=4.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BIG = 3.0e38
+
+
+def _dominance_kernel(fi_ref, fj_ref, o_ref, cnt_scr):
+    ji = pl.program_id(1)
+
+    @pl.when(ji == 0)
+    def _init():
+        cnt_scr[...] = jnp.zeros_like(cnt_scr)
+
+    fi = fi_ref[...]                                  # (bi, M) candidates
+    fj = fj_ref[...]                                  # (bj, M) potential dominators
+    # inactive rows are encoded as +BIG in every objective -> they never
+    # dominate anyone and everyone "dominates" them (harmless: their own
+    # count is ignored by the caller's active mask).
+    le = (fj[None, :, :] <= fi[:, None, :]).all(-1)   # (bi, bj)
+    lt = (fj[None, :, :] < fi[:, None, :]).any(-1)
+    dom = jnp.logical_and(le, lt)
+    cnt_scr[...] += dom.astype(jnp.int32).sum(axis=1)[:, None]
+
+    @pl.when(ji == pl.num_programs(1) - 1)
+    def _finish():
+        o_ref[...] = cnt_scr[...]
+
+
+def dominated_counts(objectives, *, block=512, interpret=False):
+    """objectives: (N, M) f32 (inactive rows pre-masked to +BIG).
+    Returns (N,) i32 dominated counts."""
+    n, m = objectives.shape
+    block = max(8, min(block, n))
+    if n % block:
+        block = 1 if n < 8 else next(b for b in range(block, 0, -1)
+                                     if n % b == 0)
+    nb = n // block
+    out = pl.pallas_call(
+        functools.partial(_dominance_kernel),
+        grid=(nb, nb),
+        in_specs=[
+            pl.BlockSpec((block, m), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, m), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block, 1), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(objectives, objectives)
+    return out[:, 0]

@@ -1,0 +1,116 @@
+"""jit'd wrappers around the Pallas kernels.
+
+On TPU the kernels compile natively; everywhere else (this CPU container)
+they run in interpret mode for small shapes, and callers that cannot afford
+interpret-mode cost (dry-run lowering, large CPU tests) use the jnp reference
+path via the ``*_available`` gates.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.diffusion import diffuse_evaporate as _diffuse_pallas
+from repro.kernels.dominance import dominated_counts as _dom_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+
+# Interpret-mode execution threshold: beyond this many grid steps the python
+# interpreter cost explodes, so non-TPU backends fall back to the reference.
+_INTERPRET_GRID_LIMIT = 4096
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# --------------------------------------------------------------------------
+# Flash attention
+# --------------------------------------------------------------------------
+def flash_available(q, k, *, block_q=512, block_k=512) -> bool:
+    """Can the Pallas kernel handle these shapes on this backend?"""
+    b, s, h, d = q.shape  # model layout (B,S,H,D)
+    if d % 8 != 0 or s < 8:
+        return False
+    if h % k.shape[2] != 0:
+        return False
+    if not on_tpu():
+        bq, bk = min(block_q, s), min(block_k, s)
+        if s % bq or s % bk:
+            return False
+        return b * h * (s // bq) * (s // bk) <= _INTERPRET_GRID_LIMIT \
+            and not _in_dryrun()
+    return s % min(block_q, s) == 0 and s % min(block_k, s) == 0
+
+
+_DRYRUN = [False]
+
+
+def set_dryrun(flag: bool):
+    """Dry-run lowering must not inline interpret-mode kernels (HLO blowup)."""
+    _DRYRUN[0] = flag
+
+
+def _in_dryrun() -> bool:
+    return _DRYRUN[0]
+
+
+def flash_attention_gqa(q, k, v, *, causal=True, block_q=512, block_k=512):
+    """Model-layout wrapper: q (B,S,H,D), k/v (B,S,KH,D) -> (B,S,H,D)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    s = qt.shape[2]
+    out = _flash_pallas(qt, kt, vt, causal=causal,
+                        block_q=min(block_q, s), block_k=min(block_k, s),
+                        interpret=not on_tpu())
+    return out.transpose(0, 2, 1, 3)
+
+
+def flash_attention_gqa_diff(q, k, v, *, causal=True, block_q=512,
+                             block_k=512):
+    """Differentiable flash attention (custom_vjp with the Pallas backward
+    kernels) in model layout — usable inside training loss functions."""
+    from repro.kernels.flash_attention_bwd import flash_attention_diff
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    s = qt.shape[2]
+    out = flash_attention_diff(qt, kt, vt, causal, min(block_q, s),
+                               min(block_k, s), not on_tpu())
+    return out.transpose(0, 2, 1, 3)
+
+
+def flash_attention_or_ref(q, k, v, *, causal=True):
+    """(B,H,S,D) layout; kernel when available, else the oracle."""
+    if on_tpu() or flash_available(q.transpose(0, 2, 1, 3),
+                                   k.transpose(0, 2, 1, 3)):
+        return _flash_pallas(q, k, v, causal=causal, interpret=not on_tpu())
+    return ref.flash_attention_ref(q, k, v, causal=causal)
+
+
+# --------------------------------------------------------------------------
+# Ants diffusion
+# --------------------------------------------------------------------------
+def diffuse_evaporate(chem, rate, evap):
+    n, w, _ = chem.shape
+    if on_tpu():
+        return _diffuse_pallas(chem, rate, evap, interpret=False)
+    if n <= _INTERPRET_GRID_LIMIT // 8 and not _in_dryrun():
+        return _diffuse_pallas(chem, rate, evap, interpret=True)
+    return ref.diffuse_evaporate_ref(chem, rate, evap)
+
+
+# --------------------------------------------------------------------------
+# NSGA-II dominance
+# --------------------------------------------------------------------------
+def dominated_counts(objectives):
+    n = objectives.shape[0]
+    if on_tpu():
+        return _dom_pallas(objectives, interpret=False)
+    if (n // 512 + 1) ** 2 <= _INTERPRET_GRID_LIMIT and n >= 8 \
+            and not _in_dryrun():
+        return _dom_pallas(objectives, interpret=True)
+    return ref.dominated_counts_ref(objectives)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """q: (B,H,S,D); k,v: (B,KH,S,D). Plain softmax attention with GQA."""
+    b, h, s, d = q.shape
+    kh = k.shape[1]
+    g = h // kh
+    qg = q.reshape(b, kh, g, s, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qg, kf) / math.sqrt(d)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", probs, vf)
+    return out.reshape(b, h, s, d).astype(q.dtype)
+
+
+def diffuse_evaporate_ref(chem, rate, evap):
+    """chem: (N,W,W) f32; NetLogo bounded-world diffuse + evaporate."""
+    n, w, _ = chem.shape
+    rate = rate[:, None, None]
+    share = chem * rate / 8.0
+    padded = jnp.pad(share, ((0, 0), (1, 1), (1, 1)))
+    acc = jnp.zeros_like(chem)
+    ncount = jnp.zeros_like(chem)
+    for di in (-1, 0, 1):
+        for dj in (-1, 0, 1):
+            if di == 0 and dj == 0:
+                continue
+            acc = acc + padded[:, 1 + di:1 + di + w, 1 + dj:1 + dj + w]
+            nb = jnp.ones((n, w, w))
+            nb = jnp.pad(nb, ((0, 0), (1, 1), (1, 1)))
+            ncount = ncount + nb[:, 1 + di:1 + di + w, 1 + dj:1 + dj + w]
+    kept = chem - share * ncount
+    return (kept + acc) * (1.0 - evap[:, None, None])
+
+
+def dominated_counts_ref(objectives):
+    """(N, M) f32 -> (N,) i32; minimization dominance counts."""
+    le = (objectives[None, :, :] <= objectives[:, None, :]).all(-1)
+    lt = (objectives[None, :, :] < objectives[:, None, :]).any(-1)
+    dom = jnp.logical_and(le, lt)        # dom[i, j] = j dominates i
+    return dom.astype(jnp.int32).sum(axis=1)

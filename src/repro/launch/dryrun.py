@@ -1,0 +1,376 @@
+"""Multi-pod dry-run: prove every (architecture x input shape x mesh) cell
+lowers AND compiles under the production meshes, and extract the roofline
+raw terms (per-device FLOPs/bytes from cost_analysis, collective bytes from
+the post-SPMD HLO, HBM footprint from memory_analysis).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # every cell
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m \
+        --shape train_4k --mesh pod
+    PYTHONPATH=src python -m repro.launch.dryrun --ga              # paper GA cell
+
+Each cell writes experiments/dryrun/<mesh>__<arch>__<shape>.json and is
+skipped when that file already exists (restart-safe). --all runs cells in
+subprocesses so one OOM cannot kill the sweep (fault isolation).
+"""
+import os
+# MUST precede any jax import: jax locks the device count on first init.
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+                "s16": 2, "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def _result_bytes(line: str) -> int:
+    """Sum byte sizes of the result shapes on an HLO op line."""
+    lhs = line.split(" = ", 1)[0] if " = " in line else ""
+    rhs = line.split(" = ", 1)[1] if " = " in line else line
+    # result type(s) appear at the start of rhs, before the op name
+    head = rhs.split(")", 1)[0] if rhs.startswith("(") else rhs.split(" ", 1)[0]
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(head):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """{collective op: result bytes summed} over the (post-SPMD) module.
+    Per-device convention (matches cost_analysis)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if " = " not in ls:
+            continue
+        rhs = ls.split(" = ", 1)[1]
+        for op in _COLLECTIVES:
+            # match ` <op>(` or `<op>-start(` exactly (not fusion names)
+            if re.search(rf"\b{op}(-start)?\(", rhs):
+                out[op] += _result_bytes(ls)
+                out["count"] += 1
+                break
+    return out
+
+
+def measure_cell(cfg, shape, mesh, *, roofline_variant: bool = False,
+                 shape_name: str = None, use_compression: bool = False) -> dict:
+    """Compile one (cfg, shape, mesh) cell and return cost/memory/collective
+    records. roofline_variant: two-point extrapolation over UNROLLED
+    truncated stacks (see run_cell docstring)."""
+    import dataclasses as _dc
+
+    import jax
+
+    from repro.kernels import ops as kops
+    from repro.models import build
+    from repro.runtime import sharding as shd
+    from repro.train import OptimizerConfig, abstract_train_state, make_train_step
+
+    kops.set_dryrun(True)
+    shape_name = shape_name or shape.name
+    record = {}
+
+    def compile_one(cfg_v, mb_override=None):
+        model = build(cfg_v)
+
+        def shardings_for(sds_tree, axes_tree):
+            return shd.tree_shardings(sds_tree, axes_tree, mesh,
+                                      fsdp=cfg_v.fsdp)
+
+        with shd.use_mesh(mesh, overrides=cfg_v.sharding_overrides):
+            if shape.kind == "train":
+                state_sds, state_axes = abstract_train_state(
+                    model, use_compression)
+                state_sh = shardings_for(state_sds, state_axes)
+                batch_sds = model.input_specs(shape)
+                batch_sh = shardings_for(batch_sds, model.batch_axes(shape))
+                oc = OptimizerConfig(schedule=cfg_v.schedule)
+                mb = mb_override or cfg_v.microbatches_for(shape_name)
+                fn = make_train_step(model, oc, mb,
+                                     use_compression=use_compression,
+                                     param_shardings=state_sh.params)
+                jfn = jax.jit(fn, in_shardings=(state_sh, batch_sh),
+                              out_shardings=(state_sh, None))
+                lowered = jfn.lower(state_sds, batch_sds)
+            else:
+                params_sds, params_axes = model.abstract_init()
+                params_sh = shardings_for(params_sds, params_axes)
+                cache_sds, cache_axes = model.abstract_cache(
+                    shape.global_batch, shape.seq_len)
+                cache_sh = shardings_for(cache_sds, cache_axes)
+                batch_sds = model.input_specs(shape)
+                batch_sh = shardings_for(batch_sds, model.batch_axes(shape))
+                fn = model.prefill if shape.kind == "prefill" else model.decode
+                jfn = jax.jit(fn,
+                              in_shardings=(params_sh, batch_sh, cache_sh),
+                              out_shardings=(None, cache_sh))
+                lowered = jfn.lower(params_sds, batch_sds, cache_sds)
+            compiled = lowered.compile()
+        ca = compiled.cost_analysis() or {}
+        ma = compiled.memory_analysis()
+        return {
+            "cost_analysis": {
+                "flops": float(ca.get("flops", -1)),
+                "bytes_accessed": float(ca.get("bytes accessed", -1)),
+                "transcendentals": float(ca.get("transcendentals", 0)),
+            },
+            "memory_analysis": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "peak_live_bytes": (ma.argument_size_in_bytes
+                                    + ma.output_size_in_bytes
+                                    + ma.temp_size_in_bytes
+                                    - ma.alias_size_in_bytes),
+            },
+            "collectives": collective_bytes(compiled.as_text()),
+        }
+
+    if not roofline_variant:
+        res = compile_one(cfg)
+        record.update(res)
+    else:
+        # Two-point extrapolation: XLA counts while bodies once, so compile
+        # UNROLLED truncated stacks of 1 and 2 pattern-blocks (mb=1, single
+        # CE chunk) and extrapolate linearly to the full depth:
+        #   F(nb) = F(1) + (nb - 1) * (F(2) - F(1)).
+        # Exact for programs that are affine in block count (everything here;
+        # validated against a full unroll for smollm in EXPERIMENTS.md).
+        plen = len(cfg.pattern)
+        points = []
+        for k in (1, 2):
+            cfg_k = _dc.replace(
+                cfg, n_layers=plen * k,
+                n_encoder_layers=(k if cfg.is_encoder_decoder else
+                                  cfg.n_encoder_layers and k),
+                unroll_blocks=True, ce_chunk=1 << 30)
+            points.append(compile_one(cfg_k, mb_override=1))
+        nb = cfg.n_blocks if not cfg.is_encoder_decoder else cfg.n_layers
+        def extrap(path):
+            a = points[0]
+            b = points[1]
+            for key in path[:-1]:
+                a, b = a[key], b[key]
+            f1, f2 = a[path[-1]], b[path[-1]]
+            return f1 + (nb - 1) * (f2 - f1)
+        record["cost_analysis"] = {
+            k: extrap(("cost_analysis", k))
+            for k in ("flops", "bytes_accessed", "transcendentals")}
+        record["collectives"] = {
+            k: extrap(("collectives", k))
+            for k in points[0]["collectives"]}
+        record["memory_analysis"] = points[1]["memory_analysis"]
+        record["two_point_raw"] = points
+        record["extrapolated_blocks"] = nb
+    total, active = cfg.param_counts()
+    record["params_total"] = total
+    record["params_active"] = active
+    return record
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_path: str,
+             roofline_variant: bool = False):
+    """Compile + record one registry cell. roofline_variant: the layer scan
+    is UNROLLED at truncated depths 1 and 2 and extrapolated (XLA counts
+    while bodies once — tests/test_roofline.py calibrates this), with mb=1
+    and a single-chunk CE. The default variant is the production program
+    (scans + grad accumulation) and is the runnability artifact."""
+    from repro.configs import get_config, get_shape
+    from repro.launch.mesh import make_production_mesh
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+              "mesh_shape": dict(mesh.shape),
+              "variant": "roofline" if roofline_variant else "production"}
+    record.update(measure_cell(cfg, shape, mesh,
+                               roofline_variant=roofline_variant,
+                               shape_name=shape_name))
+    record["status"] = "ok"
+    record["total_s"] = round(time.time() - t0, 2)
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"[dryrun] OK {mesh_kind} {arch} {shape_name} "
+          f"flops/dev={record['cost_analysis']['flops']:.3e} "
+          f"coll_bytes={sum(v for k, v in record['collectives'].items() if k != 'count'):.3e} "
+          f"({record['total_s']}s)")
+
+
+def run_ga_cell(mesh_kind: str, out_path: str, *, n_islands=2048, mu=32,
+                lam=16, replicates=5):
+    """The paper-technique cell: one island-model epoch on the ants workload,
+    lowered on the production mesh."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.ants_netlogo import CONFIG as ANTS, BOUNDS
+    from repro.ants import simulate_batch
+    from repro.evolution import NSGA2Config, init_island_state, make_epoch
+    from repro.explore import replicated_batch
+    from repro.kernels import ops as kops
+    from repro.launch.mesh import make_production_mesh
+    from repro.runtime import sharding as shd
+
+    kops.set_dryrun(True)
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    ga_cfg = NSGA2Config(mu=mu, genome_dim=2, bounds=BOUNDS, n_objectives=3)
+    eval_fn = replicated_batch(
+        lambda keys, genomes: simulate_batch(ANTS, keys, genomes[:, 0],
+                                             genomes[:, 1]),
+        replicates)
+    epoch = make_epoch(ga_cfg, eval_fn, lam=lam, steps_per_epoch=1)
+
+    record = {"arch": "ants-island-ga", "shape": f"islands_{n_islands}",
+              "mesh": mesh_kind, "mesh_shape": dict(mesh.shape),
+              "n_islands": n_islands, "mu": mu, "lam": lam,
+              "replicates": replicates, "ants_ticks": ANTS.max_ticks,
+              "status": "running"}
+
+    with shd.use_mesh(mesh):
+        state_sds = jax.eval_shape(
+            lambda k: init_island_state(ga_cfg, k, n_islands=n_islands,
+                                        archive_size=1024),
+            jax.random.key(0))
+
+        def island_shard(sds):
+            # leading island axis -> data/pod; archive & scalars replicated
+            return None
+
+        jfn = jax.jit(lambda s: epoch(s))
+        lowered = jfn.lower(state_sds)
+        record["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t1, 2)
+
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    record["cost_analysis"] = {"flops": float(ca.get("flops", -1)),
+                               "bytes_accessed": float(ca.get("bytes accessed", -1))}
+    record["memory_analysis"] = {
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "peak_live_bytes": (ma.argument_size_in_bytes
+                            + ma.output_size_in_bytes + ma.temp_size_in_bytes
+                            - ma.alias_size_in_bytes),
+    }
+    record["collectives"] = collective_bytes(compiled.as_text())
+    record["status"] = "ok"
+    record["total_s"] = round(time.time() - t0, 2)
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"[dryrun] OK {mesh_kind} ants-island-ga "
+          f"flops/dev={record['cost_analysis']['flops']:.3e} "
+          f"({record['total_s']}s)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["pod", "multipod"], default="pod")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--ga", action="store_true")
+    ap.add_argument("--roofline", action="store_true",
+                    help="exact-cost variant (unrolled, single-chunk CE, mb=1)")
+    ap.add_argument("--out-dir", default=OUT_DIR)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    prefix = "roofline__" if args.roofline else ""
+    if args.all:
+        from repro.configs import all_cells
+        meshes = ("pod",) if args.roofline else ("pod", "multipod")
+        cells = [(a, s.name, m)
+                 for m in meshes
+                 for (a, _c, s, status) in all_cells()
+                 if status == "run"]
+        skips = [(a, s.name, m, status)
+                 for m in meshes
+                 for (a, _c, s, status) in all_cells()
+                 if status != "run"]
+        for a, sn, m, status in skips:
+            path = os.path.join(args.out_dir, f"{prefix}{m}__{a}__{sn}.json")
+            with open(path, "w") as f:
+                json.dump({"arch": a, "shape": sn, "mesh": m,
+                           "status": status}, f, indent=2)
+        failures = []
+        for a, sn, m in cells:
+            path = os.path.join(args.out_dir, f"{prefix}{m}__{a}__{sn}.json")
+            if os.path.exists(path) and not args.force:
+                with open(path) as f:
+                    if json.load(f).get("status") == "ok":
+                        print(f"[dryrun] cached {prefix}{m} {a} {sn}")
+                        continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", a,
+                   "--shape", sn, "--mesh", m, "--out-dir", args.out_dir]
+            if args.roofline:
+                cmd.append("--roofline")
+            r = subprocess.run(cmd, env={**os.environ, "PYTHONPATH": "src"})
+            if r.returncode != 0:
+                failures.append((m, a, sn))
+                with open(path, "w") as f:
+                    json.dump({"arch": a, "shape": sn, "mesh": m,
+                               "status": f"FAILED rc={r.returncode}"}, f)
+        # GA cells (production variant only: the GA program is loop-shaped)
+        for m in (() if args.roofline else ("pod", "multipod")):
+            path = os.path.join(args.out_dir, f"{m}__ants-island-ga__islands.json")
+            if not (os.path.exists(path) and not args.force):
+                r = subprocess.run(
+                    [sys.executable, "-m", "repro.launch.dryrun", "--ga",
+                     "--mesh", m, "--out-dir", args.out_dir],
+                    env={**os.environ, "PYTHONPATH": "src"})
+                if r.returncode != 0:
+                    failures.append((m, "ants-island-ga", "islands"))
+        print(f"[dryrun] sweep done; {len(failures)} failures: {failures}")
+        sys.exit(1 if failures else 0)
+
+    if args.ga:
+        path = os.path.join(args.out_dir,
+                            f"{args.mesh}__ants-island-ga__islands.json")
+        run_ga_cell(args.mesh, path)
+        return
+
+    assert args.arch and args.shape, "--arch/--shape or --all or --ga"
+    path = os.path.join(args.out_dir,
+                        f"{prefix}{args.mesh}__{args.arch}__{args.shape}.json")
+    try:
+        run_cell(args.arch, args.shape, args.mesh, path,
+                 roofline_variant=args.roofline)
+    except Exception:
+        traceback.print_exc()
+        with open(path, "w") as f:
+            json.dump({"arch": args.arch, "shape": args.shape,
+                       "mesh": args.mesh, "status": "FAILED",
+                       "error": traceback.format_exc()[-4000:]}, f, indent=2)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

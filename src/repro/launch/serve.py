@@ -1,0 +1,61 @@
+"""Serving driver: batched generation with a reduced model.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
+        --batch 4 --prompt-len 16 --new-tokens 24
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build
+from repro.serve import ServeConfig, generate
+
+
+def serve_once(arch: str, *, reduced=True, batch=4, prompt_len=16,
+               new_tokens=24, temperature=0.0, dtype="float32",
+               printer=print):
+    cfg = dataclasses.replace(get_config(arch, reduced=reduced), dtype=dtype,
+                              use_flash_kernel=False)
+    model = build(cfg)
+    params, _ = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (batch, prompt_len)), jnp.int32)
+    frames = None
+    if cfg.is_encoder_decoder:
+        frames = jnp.asarray(rng.normal(
+            size=(batch, cfg.encoder_seq_len, cfg.d_model)).astype(np.float32))
+    sc = ServeConfig(max_new_tokens=new_tokens, temperature=temperature)
+    t0 = time.time()
+    out = generate(model, params, prompts, sc, frames=frames)
+    out.block_until_ready()
+    dt = time.time() - t0
+    printer(f"[serve] {arch}: {batch}x{new_tokens} tokens in {dt:.2f}s "
+            f"({batch * new_tokens / dt:.1f} tok/s incl. compile)")
+    return np.asarray(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+    out = serve_once(args.arch, reduced=args.reduced, batch=args.batch,
+                     prompt_len=args.prompt_len, new_tokens=args.new_tokens,
+                     temperature=args.temperature)
+    print(out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,256 @@
+"""Attention mixers: GQA (RoPE, optional qk-norm), MLA (DeepSeek-V2), and
+cross-attention (enc-dec). Each has a full-sequence path (train/prefill) and
+a single-token cached path (decode).
+
+Weights are kept in 3D head-factored form so the sharding resolver can shard
+the head axis when it divides the mesh and fall back cleanly when it does not
+(e.g. smollm's 9 heads on a 16-way model axis).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (Pair, pack, dense_init, rms_norm,
+                                 apply_rope, rope_cos_sin)
+
+
+# ===========================================================================
+# GQA
+# ===========================================================================
+def gqa_init(cfg, key, dtype) -> Pair:
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    parts = dict(
+        wq=dense_init(ks[0], (d, cfg.n_heads, hd), ("embed", "heads", "head_dim"), dtype),
+        wk=dense_init(ks[1], (d, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim"), dtype),
+        wv=dense_init(ks[2], (d, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim"), dtype),
+        wo=dense_init(ks[3], (cfg.n_heads, hd, d), ("heads", "head_dim", "embed"), dtype,
+                      scale=1.0 / math.sqrt(cfg.n_heads * hd)),
+    )
+    if cfg.qk_norm:
+        parts["q_norm"] = (jnp.ones((hd,), dtype), ("head_dim",))
+        parts["k_norm"] = (jnp.ones((hd,), dtype), ("head_dim",))
+    return pack(**parts)
+
+
+def _qkv(cfg, p, x, positions):
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    cos, sin = rope_cos_sin(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, n_kv_heads):
+    """Grouped scaled-dot-product attention.
+
+    q: (B,S,H,D) k,v: (B,T,Hkv,D) mask: (B,1,S,T) or (S,T) bool.
+    """
+    b, s, h, d = q.shape
+    t, dv = k.shape[1], v.shape[-1]
+    g = h // n_kv_heads
+    qg = q.reshape(b, s, n_kv_heads, g, d)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / math.sqrt(d)
+    if mask.ndim == 2:                          # (S,T)
+        mask = mask[None, None, None]           # (1,1,1,S,T)
+    else:                                       # (B,S,T)
+        mask = mask[:, None, None]              # (B,1,1,S,T)
+    scores = jnp.where(mask, scores, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, dv)
+
+
+def gqa_apply(cfg, p, x, positions, mask, allow_flash=False):
+    """Full-sequence attention. x:(B,S,d) positions:(B,S) mask:(S,T) bool.
+
+    allow_flash: inference paths (prefill) use the forward kernel; training
+    paths may use the differentiable custom_vjp variant via
+    cfg.use_flash_kernel + kops.flash_attention_gqa_diff (see
+    kernels/flash_attention_bwd.py) — enabled on TPU backends.
+    """
+    q, k, v = _qkv(cfg, p, x, positions)
+    if allow_flash and getattr(cfg, "use_flash_kernel", False):
+        from repro.kernels import ops as kops
+        if kops.flash_available(q, k):
+            out = kops.flash_attention_gqa(q, k, v, causal=True)
+            return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if getattr(cfg, "attn_seq_shard", False):
+        from repro.runtime.sharding import constrain
+        # sequence-parallel attention compute: q (and the output) shard
+        # their S dim on the model axis; k/v stay seq-replicated so each
+        # shard sees full context (causal masking is elementwise-local).
+        q = constrain(q, ("batch", "kv_seq", None, None))
+        out = _sdpa(q, k, v, mask, cfg.n_kv_heads)
+        out = constrain(out, ("batch", "kv_seq", None, None))
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    out = _sdpa(q, k, v, mask, cfg.n_kv_heads)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def gqa_init_cache(cfg, batch, max_seq, dtype):
+    hd = cfg.resolved_head_dim
+    shape = (batch, max_seq, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def gqa_cache_axes():
+    return {"k": ("batch", "kv_seq", "kv_heads", "head_dim"),
+            "v": ("batch", "kv_seq", "kv_heads", "head_dim")}
+
+
+def gqa_prefill(cfg, p, x, positions, mask, cache):
+    """Like gqa_apply but also writes k/v into the cache (left-aligned)."""
+    q, k, v = _qkv(cfg, p, x, positions)
+    s = x.shape[1]
+    cache = {"k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=1),
+             "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=1)}
+    out = _sdpa(q, k, v, mask, cfg.n_kv_heads)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache
+
+
+def gqa_decode(cfg, p, x, positions, cache):
+    """x: (B,1,d); positions: (B,) current index; cache k/v: (B,T,Hkv,D)."""
+    b = x.shape[0]
+    q, k, v = _qkv(cfg, p, x, positions[:, None])
+    bidx = jnp.arange(b)
+    ck = cache["k"].at[bidx, positions].set(k[:, 0])
+    cv = cache["v"].at[bidx, positions].set(v[:, 0])
+    t = ck.shape[1]
+    mask = (jnp.arange(t)[None, :] <= positions[:, None])[:, None, :]  # (B,1,T)
+    out = _sdpa(q, ck, cv, mask, cfg.n_kv_heads)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), {"k": ck, "v": cv}
+
+
+# ===========================================================================
+# MLA (multi-head latent attention)
+# ===========================================================================
+def mla_init(cfg, key, dtype) -> Pair:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    return pack(
+        wq=dense_init(ks[0], (d, h, m.qk_nope_head_dim + m.qk_rope_head_dim),
+                      ("embed", "heads", "head_dim"), dtype),
+        w_dkv=dense_init(ks[1], (d, m.kv_lora_rank), ("embed", "lora"), dtype),
+        w_krope=dense_init(ks[2], (d, m.qk_rope_head_dim), ("embed", "rope_dim"), dtype),
+        kv_norm=(jnp.ones((m.kv_lora_rank,), dtype), ("lora",)),
+        w_uk=dense_init(ks[3], (m.kv_lora_rank, h, m.qk_nope_head_dim),
+                        ("lora", "heads", "head_dim"), dtype),
+        w_uv=dense_init(ks[4], (m.kv_lora_rank, h, m.v_head_dim),
+                        ("lora", "heads", "head_dim"), dtype),
+        wo=dense_init(ks[5], (h, m.v_head_dim, d), ("heads", "head_dim", "embed"),
+                      dtype, scale=1.0 / math.sqrt(h * m.v_head_dim)),
+    )
+
+
+def _mla_qc(cfg, p, x, positions):
+    """Shared q / compressed-kv computation. Returns q_nope,q_rope,c_kv,k_rope."""
+    m = cfg.mla
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    c_kv = rms_norm(jnp.einsum("bsd,dl->bsl", x, p["w_dkv"]), p["kv_norm"],
+                    cfg.norm_eps)
+    k_rope = jnp.einsum("bsd,dr->bsr", x, p["w_krope"])
+    cos, sin = rope_cos_sin(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_apply(cfg, p, x, positions, mask, cache=None):
+    """Full-sequence MLA (expanded form). Optionally fills the cache."""
+    m = cfg.mla
+    q_nope, q_rope, c_kv, k_rope = _mla_qc(cfg, p, x, positions)
+    k_nope = jnp.einsum("bsl,lhk->bshk", c_kv, p["w_uk"])
+    v = jnp.einsum("bsl,lhv->bshv", c_kv, p["w_uv"])
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  k_nope.shape[:3] + (m.qk_rope_head_dim,))],
+        axis=-1)
+    out = _sdpa(q, k, v, mask, cfg.n_heads)   # MLA heads are not grouped
+    y = jnp.einsum("bshv,hvd->bsd", out, p["wo"])
+    if cache is not None:
+        cache = {
+            "c_kv": jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv, 0, axis=1),
+            "k_rope": jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope, 0, axis=1),
+        }
+        return y, cache
+    return y
+
+
+def mla_init_cache(cfg, batch, max_seq, dtype):
+    m = cfg.mla
+    return {"c_kv": jnp.zeros((batch, max_seq, m.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_seq, m.qk_rope_head_dim), dtype)}
+
+
+def mla_cache_axes():
+    return {"c_kv": ("batch", "kv_seq", "lora"),
+            "k_rope": ("batch", "kv_seq", "rope_dim")}
+
+
+def mla_decode(cfg, p, x, positions, cache):
+    """Absorbed-weight MLA decode: attention runs in the compressed space, so
+    the cache is only (lora + rope) wide per token — the paper's KV-cache
+    compression is what makes 32k/500k decode shapes cheap."""
+    m = cfg.mla
+    b = x.shape[0]
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qc(cfg, p, x, positions[:, None])
+    bidx = jnp.arange(b)
+    c_kv = cache["c_kv"].at[bidx, positions].set(c_kv_new[:, 0])
+    k_rope = cache["k_rope"].at[bidx, positions].set(k_rope_new[:, 0])
+    # absorb w_uk into q: (B,1,H,nope) x (lora,H,nope) -> (B,1,H,lora)
+    q_lora = jnp.einsum("bshk,lhk->bshl", q_nope, p["w_uk"])
+    scores = (jnp.einsum("bshl,btl->bhst", q_lora, c_kv)
+              + jnp.einsum("bshr,btr->bhst", q_rope, k_rope)).astype(jnp.float32)
+    scores = scores / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    t = c_kv.shape[1]
+    mask = (jnp.arange(t)[None, :] <= positions[:, None])[:, None, None, :]
+    scores = jnp.where(mask, scores, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out_lora = jnp.einsum("bhst,btl->bshl", probs, c_kv)
+    out = jnp.einsum("bshl,lhv->bshv", out_lora, p["w_uv"])
+    y = jnp.einsum("bshv,hvd->bsd", out, p["wo"])
+    return y, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+# ===========================================================================
+# Cross-attention (whisper decoder -> encoder states); no RoPE.
+# ===========================================================================
+def xattn_init(cfg, key, dtype) -> Pair:
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return pack(
+        wq=dense_init(ks[0], (d, cfg.n_heads, hd), ("embed", "heads", "head_dim"), dtype),
+        wk=dense_init(ks[1], (d, cfg.n_heads, hd), ("embed", "heads", "head_dim"), dtype),
+        wv=dense_init(ks[2], (d, cfg.n_heads, hd), ("embed", "heads", "head_dim"), dtype),
+        wo=dense_init(ks[3], (cfg.n_heads, hd, d), ("heads", "head_dim", "embed"), dtype,
+                      scale=1.0 / math.sqrt(cfg.n_heads * hd)),
+    )
+
+
+def xattn_kv(p, enc):
+    return (jnp.einsum("btd,dhk->bthk", enc, p["wk"]),
+            jnp.einsum("btd,dhk->bthk", enc, p["wv"]))
+
+
+def xattn_apply(cfg, p, x, kv):
+    k, v = kv
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    mask = jnp.ones((q.shape[1], k.shape[1]), bool)
+    out = _sdpa(q, k, v, mask, cfg.n_heads)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])

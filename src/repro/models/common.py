@@ -1,0 +1,119 @@
+"""Shared building blocks for the model zoo.
+
+Parameter idiom
+---------------
+Every ``*_init`` function returns a **pair** ``(params, axes)`` of two pytrees
+with identical structure: ``params`` holds arrays, ``axes`` holds tuples of
+*logical axis names* (one per array dim). The sharding resolver
+(`repro.runtime.sharding`) maps logical names -> mesh ``PartitionSpec`` with
+divisibility guards. ``pack(**pairs)`` merges child pairs into a dict pair.
+
+This keeps sharding metadata exactly in sync with the param tree and works
+under ``jax.eval_shape`` (the axes tree is built as a trace-time side product;
+see `repro.models.model.abstract_init`).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pair = Tuple  # (params_subtree, axes_subtree)
+
+
+def pack(**pairs: Pair) -> Pair:
+    """Merge {name: (params, axes)} into ({name: params}, {name: axes})."""
+    return ({k: v[0] for k, v in pairs.items()},
+            {k: v[1] for k, v in pairs.items()})
+
+
+def dense_init(key, shape, axes, dtype, scale: float | None = None) -> Pair:
+    """Truncated-normal dense weight with fan-in scaling by default."""
+    assert len(shape) == len(axes), (shape, axes)
+    fan_in = shape[0] if len(shape) <= 2 else math.prod(shape[:-1])
+    if scale is None:
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+    w = jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32) * scale
+    return w.astype(dtype), tuple(axes)
+
+
+def embed_init(key, vocab, d_model, dtype) -> Pair:
+    w = jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02
+    return w.astype(dtype), ("vocab", "embed")
+
+
+def norm_init(dim, dtype, with_bias=False) -> Pair:
+    if with_bias:
+        return ({"scale": jnp.ones((dim,), dtype),
+                 "bias": jnp.zeros((dim,), dtype)},
+                {"scale": ("embed",), "bias": ("embed",)})
+    return jnp.ones((dim,), dtype), ("embed",)
+
+
+# --------------------------------------------------------------------------
+# Norms (computed in f32, cast back)
+# --------------------------------------------------------------------------
+def rms_norm(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, p, eps):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def apply_norm(cfg, x, p):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p, cfg.norm_eps)
+    return rms_norm(x, p, cfg.norm_eps)
+
+
+def make_norm(cfg, dtype) -> Pair:
+    return norm_init(cfg.d_model, dtype, with_bias=(cfg.norm == "layernorm"))
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+def rope_cos_sin(positions, dim, theta):
+    """positions: (...,) int -> cos,sin of shape (..., dim//2), f32."""
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    angles = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., S, H, D); cos/sin: (..., S, D//2) broadcast over heads.
+
+    Rotates pairs (x[2i], x[2i+1]) — llama "interleaved-half" convention:
+    split into two halves.
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(jnp.float32)
+    s = sin[..., None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * c - x2f * s, x1f * s + x2f * c], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len, dim):
+    """Whisper-style fixed sinusoidal embeddings (seq_len, dim), f32."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    inv = jnp.exp(-math.log(10000.0) * jnp.arange(dim // 2, dtype=jnp.float32)
+                  / max(dim // 2 - 1, 1))
+    ang = pos * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]

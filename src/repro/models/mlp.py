@@ -1,0 +1,32 @@
+"""Feed-forward blocks: SwiGLU (silu) and plain GELU MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Pair, pack, dense_init, activation
+
+
+def mlp_init(cfg, key, dtype, d_ff=None) -> Pair:
+    d_ff = d_ff or cfg.d_ff
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    if cfg.act == "silu":
+        return pack(
+            w_gate=dense_init(ks[0], (d, d_ff), ("embed", "mlp"), dtype),
+            w_up=dense_init(ks[1], (d, d_ff), ("embed", "mlp"), dtype),
+            w_down=dense_init(ks[2], (d_ff, d), ("mlp", "embed"), dtype),
+        )
+    return pack(
+        w_up=dense_init(ks[1], (d, d_ff), ("embed", "mlp"), dtype),
+        w_down=dense_init(ks[2], (d_ff, d), ("mlp", "embed"), dtype),
+    )
+
+
+def mlp_apply(cfg, p, x):
+    act = activation(cfg.act)
+    if cfg.act == "silu":
+        h = act(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = act(x @ p["w_up"])
+    return h @ p["w_down"]

@@ -1,0 +1,140 @@
+"""Mixture-of-experts feed-forward with grouped sort-based dispatch.
+
+Design (TPU adaptation, see DESIGN.md):
+- Tokens are dispatched *within groups* (by default one group per batch row).
+  Sorting/position bookkeeping then happens inside a vmap over the group
+  axis, which is batch-sharded — GSPMD keeps the sorts local instead of
+  all-gathering the global token dim (the classic pure-jit MoE pathology).
+- Capacity-based: each expert takes at most C = ceil(tokens_per_group * top_k
+  / E * capacity_factor) tokens per group; overflow tokens are dropped
+  (contribute zero) and reported in aux stats.
+- Expert compute is a single batched einsum (E, C, d) x (E, d, f) whose E axis
+  the resolver shards over the "model" mesh axis (expert parallelism).
+- Router math in f32; top-k probs renormalized (DeepSeek convention).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Pair, pack, dense_init, activation
+
+
+def moe_init(cfg, key, dtype) -> Pair:
+    mo = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    parts = dict(
+        router=dense_init(ks[0], (d, mo.num_experts), ("embed", "expert_in"),
+                          dtype=jnp.float32, scale=0.02),
+        w_gate=dense_init(ks[1], (mo.num_experts, d, mo.expert_d_ff),
+                          ("expert", "embed", "mlp"), dtype),
+        w_up=dense_init(ks[2], (mo.num_experts, d, mo.expert_d_ff),
+                        ("expert", "embed", "mlp"), dtype),
+        w_down=dense_init(ks[3], (mo.num_experts, mo.expert_d_ff, d),
+                          ("expert", "mlp", "embed"), dtype),
+    )
+    if mo.num_shared_experts:
+        sks = jax.random.split(ks[4], 3)
+        parts["shared"] = pack(
+            w_gate=dense_init(sks[0], (d, mo.shared_d_ff), ("embed", "mlp"), dtype),
+            w_up=dense_init(sks[1], (d, mo.shared_d_ff), ("embed", "mlp"), dtype),
+            w_down=dense_init(sks[2], (mo.shared_d_ff, d), ("mlp", "embed"), dtype),
+        )
+    return pack(**parts)
+
+
+def _capacity(tokens_per_group: int, mo) -> int:
+    c = math.ceil(tokens_per_group * mo.top_k / mo.num_experts
+                  * mo.capacity_factor)
+    return max(int(c), mo.top_k)
+
+
+def _dispatch_group(x, top_ids, top_probs, num_experts, capacity):
+    """One group's dispatch. x:(T,d) top_ids/probs:(T,k). Returns
+    (expert_in (E,C,d), slot (T*k,), valid (T*k,), inv-permutation info)."""
+    t, k = top_ids.shape
+    flat_e = top_ids.reshape(-1)                       # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((num_experts,), jnp.int32).at[sorted_e].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_e]
+    valid = pos < capacity
+    slot = jnp.where(valid, sorted_e * capacity + pos, num_experts * capacity)
+    x_rep = jnp.repeat(x, k, axis=0)[order]            # (T*k, d) sorted
+    buf = jnp.zeros((num_experts * capacity + 1, x.shape[-1]), x.dtype)
+    buf = buf.at[slot].add(jnp.where(valid[:, None], x_rep, 0))
+    expert_in = buf[:-1].reshape(num_experts, capacity, x.shape[-1])
+    return expert_in, slot, valid, order
+
+
+def _combine_group(expert_out, slot, valid, order, top_probs, t, k):
+    """Inverse of _dispatch_group. expert_out: (E,C,d)."""
+    d = expert_out.shape[-1]
+    flat = jnp.concatenate(
+        [expert_out.reshape(-1, d), jnp.zeros((1, d), expert_out.dtype)], axis=0)
+    y_sorted = flat[slot] * valid[:, None].astype(expert_out.dtype)
+    inv = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
+    y = y_sorted[inv].reshape(t, k, d)                 # unsorted (T,k,d)
+    w = top_probs.astype(expert_out.dtype)[..., None]
+    return (y * w).sum(axis=1)
+
+
+def moe_apply(cfg, p, x, router_rng=None):
+    """x: (B, S, d) -> (y, aux) with aux = {load_balance_loss, dropped_frac}.
+
+    Groups = batch rows (B). For decode (S==1) we fold everything into one
+    group so capacity math stays meaningful.
+    """
+    mo = cfg.moe
+    b, s, d = x.shape
+    if s == 1:
+        xg = x.reshape(1, b, d)                        # one group of B tokens
+    else:
+        xg = x                                         # (B groups, S tokens)
+    g, t, _ = xg.shape
+
+    logits = (xg.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    if router_rng is not None and mo.router_jitter > 0:
+        logits = logits + mo.router_jitter * jax.random.normal(
+            router_rng, logits.shape, jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)            # (g, t, E)
+    top_probs, top_ids = jax.lax.top_k(probs, mo.top_k)
+    top_probs = top_probs / jnp.clip(
+        top_probs.sum(-1, keepdims=True), 1e-9)        # renormalize (DeepSeek)
+
+    # Decode (s==1) is dropless: every token must be served, and T=B is small
+    # enough that capacity==T costs only the (memory-bound) expert sweep.
+    capacity = t if s == 1 else _capacity(t, mo)
+    act = activation(cfg.act)
+
+    def per_group(xi, ids, pr):
+        expert_in, slot, valid, order = _dispatch_group(
+            xi, ids, pr, mo.num_experts, capacity)
+        h = act(jnp.einsum("ecd,edf->ecf", expert_in, p["w_gate"])) \
+            * jnp.einsum("ecd,edf->ecf", expert_in, p["w_up"])
+        out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+        y = _combine_group(out, slot, valid, order, pr, t, mo.top_k)
+        dropped = 1.0 - valid.astype(jnp.float32).mean()
+        return y, dropped
+
+    y, dropped = jax.vmap(per_group)(xg, top_ids, top_probs)
+    y = y.reshape(b, s, d)
+
+    # Switch-style load-balance loss: E * sum_e f_e * p_e  (f32)
+    one_hot = jax.nn.one_hot(top_ids, mo.num_experts, dtype=jnp.float32)
+    f_e = one_hot.sum(axis=(0, 1, 2)) / (g * t * mo.top_k)
+    p_e = probs.mean(axis=(0, 1))
+    lb_loss = mo.num_experts * jnp.sum(f_e * p_e) * mo.load_balance_coef
+
+    if mo.num_shared_experts:
+        sp = p["shared"]
+        h = act(x @ sp["w_gate"]) * (x @ sp["w_up"])
+        y = y + h @ sp["w_down"]
+
+    return y, {"load_balance_loss": lb_loss,
+               "dropped_frac": dropped.mean()}

@@ -1,0 +1,287 @@
+"""Mamba-2 SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Implements the chunked SSD algorithm for train/prefill (within-chunk
+"attention-like" quadratic term + inter-chunk linear recurrence) and the O(1)
+sequential step for decode. A pure sequential scan lives in
+``ssd_reference`` and is the oracle for tests.
+
+Recurrence (per head h, state (P,N)):
+    h_t = exp(dt_t * A_h) * h_{t-1} + dt_t * x_t ⊗ B_t
+    y_t = C_t · h_t + D_h * x_t
+with B_t, C_t shared across heads within a group (n_groups, GQA-like).
+
+Sharding: the d_inner/head axes carry the "ssm_inner"/"ssm_heads" logical
+names which map to the model mesh axis; B/C/state dims stay replicated.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Pair, pack, dense_init
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+def ssm_dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    return s, d_in, n_heads
+
+
+def ssm_init(cfg, key, dtype) -> Pair:
+    s, d_in, h = ssm_dims(cfg)
+    d, g, n, k = cfg.d_model, s.n_groups, s.d_state, s.d_conv
+    ks = jax.random.split(key, 10)
+    # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba convention)
+    u = jax.random.uniform(ks[6], (h,), jnp.float32)
+    dt0 = jnp.exp(u * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))          # inverse softplus
+    a_init = jnp.log(jnp.linspace(1.0, 16.0, h))       # A in [-16,-1]
+    return pack(
+        w_z=dense_init(ks[0], (d, d_in), ("embed", "ssm_inner"), dtype),
+        w_x=dense_init(ks[1], (d, d_in), ("embed", "ssm_inner"), dtype),
+        w_B=dense_init(ks[2], (d, g * n), ("embed", "ssm_state"), dtype),
+        w_C=dense_init(ks[3], (d, g * n), ("embed", "ssm_state"), dtype),
+        w_dt=dense_init(ks[4], (d, h), ("embed", "ssm_heads"), dtype),
+        w_out=dense_init(ks[5], (d_in, d), ("ssm_inner", "embed"), dtype),
+        dt_bias=(dt_bias.astype(jnp.float32), ("ssm_heads",)),
+        A_log=(a_init.astype(jnp.float32), ("ssm_heads",)),
+        D=(jnp.ones((h,), jnp.float32), ("ssm_heads",)),
+        conv_x=(jnp.zeros((d_in, k), dtype).at[:, -1].set(1.0), ("ssm_inner", "conv_k")),
+        conv_B=(jnp.zeros((g * n, k), dtype).at[:, -1].set(1.0), ("ssm_state", "conv_k")),
+        conv_C=(jnp.zeros((g * n, k), dtype).at[:, -1].set(1.0), ("ssm_state", "conv_k")),
+        gate_norm=(jnp.ones((d_in,), dtype), ("ssm_inner",)),
+    )
+
+
+# --------------------------------------------------------------------------
+# Pieces
+# --------------------------------------------------------------------------
+def _causal_conv(x, w):
+    """Depthwise causal conv. x: (B,S,C), w: (C,K) -> (B,S,C)."""
+    k = w.shape[-1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :].astype(x.dtype),               # (C, 1, K)
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "OIW", "NWC"),
+        feature_group_count=w.shape[0])
+    return out
+
+
+def _gated_norm(y, z, scale, eps):
+    """RMSNorm(y * silu(z)) — the Mamba-2 gated norm."""
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    var = jnp.mean(jnp.square(gf), axis=-1, keepdims=True)
+    return (gf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(y.dtype)
+
+
+def _proj_conv(cfg, p, x):
+    """Shared projections for full-sequence paths. Returns z, xs, B, C, dt and
+    the pre-conv xBC tail for cache initialization."""
+    s, d_in, h = ssm_dims(cfg)
+    z = x @ p["w_z"]
+    xr = x @ p["w_x"]
+    Br = x @ p["w_B"]
+    Cr = x @ p["w_C"]
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32)
+                         + p["dt_bias"])                  # (B,S,H) f32
+    xs = jax.nn.silu(_causal_conv(xr, p["conv_x"]))
+    Bs = jax.nn.silu(_causal_conv(Br, p["conv_B"]))
+    Cs = jax.nn.silu(_causal_conv(Cr, p["conv_C"]))
+    return z, xr, Br, Cr, xs, Bs, Cs, dt
+
+
+def _split_heads(cfg, xs, Bs, Cs):
+    s, d_in, h = ssm_dims(cfg)
+    b, l, _ = xs.shape
+    g, n, p_ = s.n_groups, s.d_state, s.head_dim
+    hg = h // g
+    xh = xs.reshape(b, l, g, hg, p_)
+    Bh = Bs.reshape(b, l, g, n)
+    Ch = Cs.reshape(b, l, g, n)
+    return xh, Bh, Ch
+
+
+# --------------------------------------------------------------------------
+# Chunked SSD (train / prefill)
+# --------------------------------------------------------------------------
+def ssd_chunked(cfg, xh, Bh, Ch, dt, A, init_state=None):
+    """xh:(b,l,g,hg,p) Bh/Ch:(b,l,g,n) dt:(b,l,h) A:(h,) -> y, final_state.
+
+    Chunk the sequence, compute the quadratic within-chunk term, carry the
+    (g,hg,p,n) state across chunks with a scan.
+    """
+    s = cfg.ssm
+    b, l, g, hg, p_ = xh.shape
+    n = Bh.shape[-1]
+    q = min(s.chunk_size, l)
+    assert l % q == 0, (l, q)
+    c = l // q
+    h = g * hg
+
+    dtc = dt.reshape(b, c, q, h).astype(jnp.float32)
+    dA = dtc * A[None, None, None, :]                     # log-decay (<=0)
+    cum = jnp.cumsum(dA, axis=2)                          # inclusive
+    xc = xh.reshape(b, c, q, g, hg, p_)
+    Bc = Bh.reshape(b, c, q, g, n)
+    Cc = Ch.reshape(b, c, q, g, n)
+    dtx = xc * dtc.reshape(b, c, q, g, hg)[..., None].astype(xc.dtype)
+
+    # --- within-chunk (quadratic) term -------------------------------------
+    # L[i,j] = exp(cum_i - cum_j) for i >= j
+    Lh = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (b,c,q,q,h) i,j
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    Lh = jnp.where(causal[None, None, :, :, None], jnp.exp(Lh), 0.0)
+    scores = jnp.einsum("bcqgn,bckgn->bcgqk", Cc, Bc)     # i=q, j=k
+    Lg = Lh.reshape(b, c, q, q, g, hg)
+    y_diag = jnp.einsum("bcgik,bcikgh,bckghp->bcighp",
+                        scores, Lg.transpose(0, 1, 2, 3, 4, 5), dtx,
+                        preferred_element_type=jnp.float32)
+
+    # --- chunk states -------------------------------------------------------
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)          # (b,c,q,h)
+    de = decay_end.reshape(b, c, q, g, hg)
+    states = jnp.einsum("bcqgn,bcqgh,bcqghp->bcghpn", Bc,
+                        de.astype(Bc.dtype), dtx,
+                        preferred_element_type=jnp.float32)
+    chunk_decay = jnp.exp(cum[:, :, -1, :]).reshape(b, c, g, hg)  # (b,c,g,hg)
+
+    # --- inter-chunk recurrence ---------------------------------------------
+    if init_state is None:
+        init_state = jnp.zeros((b, g, hg, p_, n), jnp.float32)
+
+    def step(h_prev, inp):
+        st, dec = inp                                     # (b,g,hg,p,n),(b,g,hg)
+        h_new = dec[..., None, None] * h_prev + st
+        return h_new, h_prev                              # emit state BEFORE chunk
+
+    chunk_axis_states = states.transpose(1, 0, 2, 3, 4, 5).astype(jnp.float32)
+    chunk_axis_decay = chunk_decay.transpose(1, 0, 2, 3).astype(jnp.float32)
+    final_state, h_before = jax.lax.scan(
+        step, init_state, (chunk_axis_states, chunk_axis_decay))
+    h_before = h_before.transpose(1, 0, 2, 3, 4, 5)       # (b,c,g,hg,p,n)
+
+    # --- inter-chunk contribution -------------------------------------------
+    in_decay = jnp.exp(cum).reshape(b, c, q, g, hg)
+    y_off = jnp.einsum("bcqgn,bcqgh,bcghpn->bcqghp", Cc,
+                       in_decay.astype(Cc.dtype),
+                       h_before.astype(Cc.dtype),
+                       preferred_element_type=jnp.float32)
+
+    y = (y_diag + y_off).reshape(b, l, g, hg, p_)
+    return y, final_state
+
+
+def ssm_apply(cfg, p, x, init_cache=None, return_cache=False):
+    """Full-sequence Mamba-2 block. x: (B,S,d) -> (B,S,d) [, cache]."""
+    s, d_in, h = ssm_dims(cfg)
+    z, xr, Br, Cr, xs, Bs, Cs, dt = _proj_conv(cfg, p, x)
+    xh, Bh, Ch = _split_heads(cfg, xs, Bs, Cs)
+    A = -jnp.exp(p["A_log"])
+    init_state = init_cache["ssd_state"] if init_cache is not None else None
+    y, final_state = ssd_chunked(cfg, xh, Bh, Ch, dt, A, init_state)
+    b, l = x.shape[:2]
+    y = y.astype(x.dtype) + xh * p["D"].reshape(
+        cfg.ssm.n_groups, h // cfg.ssm.n_groups, 1).astype(x.dtype)
+    y = y.reshape(b, l, d_in)
+    y = _gated_norm(y, z, p["gate_norm"], cfg.norm_eps)
+    out = y @ p["w_out"]
+    if not return_cache:
+        return out
+    k = cfg.ssm.d_conv
+    xBC = jnp.concatenate([xr, Br, Cr], axis=-1)          # pre-conv activations
+    pad = jnp.pad(xBC, ((0, 0), (k - 1, 0), (0, 0)))
+    conv_state = pad[:, -(k - 1):, :]                     # (B, K-1, conv_dim)
+    return out, {"ssd_state": final_state, "conv_state": conv_state}
+
+
+# --------------------------------------------------------------------------
+# Decode (single token)
+# --------------------------------------------------------------------------
+def ssm_init_cache(cfg, batch, dtype):
+    s, d_in, h = ssm_dims(cfg)
+    g, n = s.n_groups, s.d_state
+    conv_dim = d_in + 2 * g * n
+    return {"ssd_state": jnp.zeros((batch, g, h // g, s.head_dim, n), jnp.float32),
+            "conv_state": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype)}
+
+
+def ssm_cache_axes():
+    return {"ssd_state": ("batch", "ssm_groups", "ssm_heads", "head_dim", "ssm_state"),
+            "conv_state": ("batch", "conv_k", "ssm_inner")}
+
+
+def ssm_decode(cfg, p, x, cache):
+    """x: (B,1,d). O(1) recurrent step."""
+    s, d_in, h = ssm_dims(cfg)
+    g, n, p_ = s.n_groups, s.d_state, s.head_dim
+    hg = h // g
+    b = x.shape[0]
+    xt = x[:, 0, :]
+    z = xt @ p["w_z"]
+    xr = xt @ p["w_x"]
+    Br = xt @ p["w_B"]
+    Cr = xt @ p["w_C"]
+    dt = jax.nn.softplus((xt @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+
+    xBC = jnp.concatenate([xr, Br, Cr], axis=-1)          # (B, conv_dim)
+    window = jnp.concatenate([cache["conv_state"], xBC[:, None, :]], axis=1)
+    wfull = jnp.concatenate([p["conv_x"], p["conv_B"], p["conv_C"]], axis=0)
+    conv_out = jnp.einsum("bkc,ck->bc", window.astype(jnp.float32),
+                          wfull.astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out).astype(x.dtype)
+    xs = conv_out[:, :d_in]
+    Bs = conv_out[:, d_in:d_in + g * n]
+    Cs = conv_out[:, d_in + g * n:]
+
+    xhh = xs.reshape(b, g, hg, p_).astype(jnp.float32)
+    Bh = Bs.reshape(b, g, n).astype(jnp.float32)
+    Ch = Cs.reshape(b, g, n).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A).reshape(b, g, hg)                 # (B,g,hg)
+    dtg = dt.reshape(b, g, hg)
+
+    h_prev = cache["ssd_state"]
+    h_new = (a[..., None, None] * h_prev
+             + jnp.einsum("bghp,bgn->bghpn", dtg[..., None] * xhh, Bh))
+    y = jnp.einsum("bghpn,bgn->bghp", h_new, Ch)
+    y = y + xhh * p["D"].reshape(g, hg, 1)
+    y = y.reshape(b, d_in).astype(x.dtype)
+    y = _gated_norm(y[:, None, :], z[:, None, :], p["gate_norm"], cfg.norm_eps)
+    out = y @ p["w_out"]
+    return out, {"ssd_state": h_new, "conv_state": window[:, 1:, :]}
+
+
+# --------------------------------------------------------------------------
+# Sequential reference (test oracle)
+# --------------------------------------------------------------------------
+def ssd_reference(cfg, xh, Bh, Ch, dt, A, init_state=None):
+    """Step-by-step scan over time. Same signature/returns as ssd_chunked."""
+    b, l, g, hg, p_ = xh.shape
+    n = Bh.shape[-1]
+    if init_state is None:
+        init_state = jnp.zeros((b, g, hg, p_, n), jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(h_prev, inp):
+        xt, Bt, Ct, dtt = inp                             # (b,g,hg,p),(b,g,n),(b,h)
+        dtg = dtt.reshape(b, g, hg)
+        a = jnp.exp(dtg * A.reshape(g, hg))
+        h_new = (a[..., None, None] * h_prev
+                 + jnp.einsum("bghp,bgn->bghpn",
+                              dtg[..., None] * xt.astype(jnp.float32),
+                              Bt.astype(jnp.float32)))
+        y = jnp.einsum("bghpn,bgn->bghp", h_new, Ct.astype(jnp.float32))
+        return h_new, y
+
+    final, ys = jax.lax.scan(
+        step, init_state,
+        (xh.transpose(1, 0, 2, 3, 4), Bh.transpose(1, 0, 2, 3),
+         Ch.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2, 3, 4), final

@@ -1,0 +1,1 @@
+from repro.serve.engine import ServeConfig, generate, make_decode_step, make_prefill_step  # noqa

@@ -1,0 +1,74 @@
+"""Batched serving engine: prefill a batch of prompts, then decode steps with
+greedy or temperature sampling. Designed so both phases are single jit-able
+functions (the dry-run lowers exactly these).
+
+Continuous-batching-lite: finished sequences (EOS) are masked and their slots
+keep decoding pad tokens without affecting others; a host-side loop can swap
+new requests into free slots between jit steps (slot admission is host logic,
+the device step is shape-stable).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0      # 0 => greedy
+    eos_id: int = -1              # -1 => never stop early
+    pad_id: int = 0
+
+
+def make_prefill_step(model):
+    def prefill_step(params, batch, cache):
+        logits, cache = model.prefill(params, batch, cache)
+        return logits, cache
+    return prefill_step
+
+
+def make_decode_step(model, sc: ServeConfig):
+    def decode_step(params, carry):
+        cache, token, positions, rng, done = carry
+        logits, cache = model.decode(
+            params, {"token": token, "positions": positions}, cache)
+        rng, sub = jax.random.split(rng)
+        if sc.temperature > 0:
+            nxt = jax.random.categorical(sub, logits[:, -1] / sc.temperature)
+        else:
+            nxt = jnp.argmax(logits[:, -1], axis=-1)
+        nxt = nxt.astype(jnp.int32)
+        done = jnp.logical_or(done, nxt == sc.eos_id)
+        nxt = jnp.where(done, sc.pad_id, nxt)
+        return (cache, nxt[:, None], positions + 1, rng, done), nxt
+    return decode_step
+
+
+def generate(model, params, prompts, sc: ServeConfig, *, max_seq=None,
+             frames=None, rng=None):
+    """prompts: (B, S) int32. Returns (B, max_new_tokens) int32."""
+    b, s = prompts.shape
+    max_seq = max_seq or (s + sc.max_new_tokens)
+    cache, _ = model.init_cache(b, max_seq)
+    batch = {"tokens": prompts}
+    if frames is not None:
+        batch["frames"] = frames
+    prefill = jax.jit(make_prefill_step(model))
+    logits, cache = prefill(params, batch, cache)
+    first = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    decode = make_decode_step(model, sc)
+
+    def scan_body(carry, _):
+        return decode(params, carry)
+
+    rng = rng if rng is not None else jax.random.key(0)
+    done = jnp.zeros((b,), bool)
+    carry = (cache, first[:, None], jnp.full((b,), s, jnp.int32), rng, done)
+    carry, tokens = jax.jit(
+        lambda c: jax.lax.scan(scan_body, c, None,
+                               length=sc.max_new_tokens - 1))(carry)
+    return jnp.concatenate([first[:, None], tokens.T], axis=1)

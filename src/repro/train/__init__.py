@@ -1,0 +1,3 @@
+from repro.train.optimizer import OptimizerConfig, init_opt_state, adamw_update  # noqa
+from repro.train.train_step import (TrainState, init_train_state,              # noqa
+                                    abstract_train_state, make_train_step)

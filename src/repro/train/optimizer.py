@@ -1,0 +1,116 @@
+"""AdamW with f32 master weights/moments (params may be bf16), global-norm
+clipping, and WSD / cosine / constant schedules.
+
+Optimizer state shards exactly like the parameters (the resolver is applied
+to the same logical axes), so FSDP configs scale optimizer memory with the
+full device count.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    learning_rate: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    # WSD (MiniCPM): warmup -> stable -> decay over the last `decay_frac`
+    schedule: str = "cosine"            # cosine | wsd | constant
+    decay_frac: float = 0.1
+    min_lr_frac: float = 0.1
+
+
+def schedule_fn(oc: OptimizerConfig) -> Callable:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(oc.warmup_steps, 1), 1.0)
+        if oc.schedule == "constant":
+            frac = 1.0
+        elif oc.schedule == "wsd":
+            decay_steps = max(int(oc.total_steps * oc.decay_frac), 1)
+            decay_start = oc.total_steps - decay_steps
+            t = jnp.clip((step - decay_start) / decay_steps, 0.0, 1.0)
+            frac = 1.0 - (1.0 - oc.min_lr_frac) * t
+        else:  # cosine
+            t = jnp.clip(step / max(oc.total_steps, 1), 0.0, 1.0)
+            frac = oc.min_lr_frac + (1 - oc.min_lr_frac) * 0.5 * (
+                1 + jnp.cos(jnp.pi * t))
+        return oc.learning_rate * warm * frac
+    return fn
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray          # () i32
+    mu: Any                    # f32 tree like params
+    nu: Any                    # f32 tree like params
+    master: Any                # f32 tree like params
+
+
+def init_opt_state(params) -> OptState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(f32, params),
+        nu=jax.tree.map(f32, params),
+        master=jax.tree.map(lambda p: p.astype(jnp.float32), params),
+    )
+
+
+def opt_state_axes(params_axes) -> OptState:
+    """Logical axes tree for the optimizer state (mirrors params)."""
+    return OptState(step=(), mu=params_axes, nu=params_axes,
+                    master=params_axes)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay for norms/scales/biases (1D params)."""
+    return True
+
+
+def adamw_update(oc: OptimizerConfig, grads, params, state: OptState):
+    """Returns (new_params, new_state, metrics). grads in any dtype."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, oc.grad_clip / jnp.maximum(gnorm, 1e-12))
+    step = state.step + 1
+    lr = schedule_fn(oc)(step)
+    b1, b2 = oc.beta1, oc.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, mu, nu, master, p):
+        g = g.astype(jnp.float32) * clip
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        mu_hat = mu / bc1
+        nu_hat = nu / bc2
+        delta = mu_hat / (jnp.sqrt(nu_hat) + oc.eps)
+        wd = oc.weight_decay if master.ndim >= 2 else 0.0
+        master = master - lr * (delta + wd * master)
+        return mu, nu, master, master.astype(p.dtype)
+
+    flat = jax.tree.map(upd, grads, state.mu, state.nu, state.master, params)
+    mu = jax.tree.map(lambda t: t[0], flat,
+                      is_leaf=lambda t: isinstance(t, tuple) and len(t) == 4)
+    nu = jax.tree.map(lambda t: t[1], flat,
+                      is_leaf=lambda t: isinstance(t, tuple) and len(t) == 4)
+    master = jax.tree.map(lambda t: t[2], flat,
+                          is_leaf=lambda t: isinstance(t, tuple) and len(t) == 4)
+    new_params = jax.tree.map(lambda t: t[3], flat,
+                              is_leaf=lambda t: isinstance(t, tuple) and len(t) == 4)
+    new_state = OptState(step=step, mu=mu, nu=nu, master=master)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

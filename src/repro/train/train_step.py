@@ -1,0 +1,127 @@
+"""The jit-able training step: gradient accumulation over microbatches
+(lax.scan), loss/grad in f32, AdamW update, optional gradient compression.
+
+``make_train_step(model, oc, microbatches)`` returns a pure function
+  train_step(state, batch) -> (state, metrics)
+with state = TrainState(params, opt, rng). The global batch arrives whole
+(e.g. (256, 4097) tokens) and is split into microbatches inside the step, so
+the launcher's data path is shape-stable regardless of the accumulation
+factor (a memory knob per (arch, shape) in the configs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import compression
+from repro.train.optimizer import (OptimizerConfig, OptState, adamw_update,
+                                   init_opt_state, opt_state_axes)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+    rng: jax.Array
+    error: Any = None         # gradient-compression error feedback (optional)
+
+
+def init_train_state(model, key, use_compression=False) -> Any:
+    """Returns (state, axes) — axes mirrors state for the sharding resolver."""
+    k_init, k_rng = jax.random.split(key)
+    params, axes = model.init(k_init)
+    state = TrainState(
+        params=params,
+        opt=init_opt_state(params),
+        rng=k_rng,
+        error=compression.init_error_buffers(params) if use_compression else None,
+    )
+    state_axes = TrainState(
+        params=axes,
+        opt=opt_state_axes(axes),
+        rng=(),
+        error=axes if use_compression else None,
+    )
+    return state, state_axes
+
+
+def abstract_train_state(model, use_compression=False):
+    """ShapeDtypeStruct version of init_train_state (no allocation)."""
+    captured = {}
+
+    def f(key):
+        s, ax = init_train_state(model, key, use_compression)
+        captured["axes"] = ax
+        return s
+
+    sds = jax.eval_shape(f, jax.random.key(0))
+    return sds, captured["axes"]
+
+
+def _split_microbatches(batch: Dict[str, jnp.ndarray], n: int):
+    def sp(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+    return {k: sp(v) for k, v in batch.items()}
+
+
+def make_train_step(model, oc: OptimizerConfig, microbatches: int = 1,
+                    use_compression: bool = False,
+                    param_shardings: Any = None) -> Callable:
+    """param_shardings (optional): NamedSharding tree for the params; pins
+    the gradient-accumulator scan carry so GSPMD keeps a consistent layout
+    across the microbatch loop (required when embeddings are tensor-sharded)."""
+    def train_step(state: TrainState, batch):
+        rng, step_rng = jax.random.split(state.rng)
+        mb = _split_microbatches(batch, microbatches)
+
+        def loss_fn(params, micro, r):
+            loss, metrics = model.loss(params, micro, r)
+            return loss, metrics
+
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        def pin(tree):
+            if param_shardings is None:
+                return tree
+            return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                                param_shardings)
+
+        def accum(carry, micro):
+            gsum, lsum, msum = carry
+            (loss, metrics), grads = grad_fn(state.params, micro, step_rng)
+            gsum = pin(jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), gsum, grads))
+            return (gsum, lsum + loss,
+                    jax.tree.map(jnp.add, msum, metrics)), None
+
+        zeros = pin(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 state.params))
+        zero_metrics = {"ce": jnp.float32(0), "tokens": jnp.float32(0),
+                        "load_balance_loss": jnp.float32(0),
+                        "dropped_frac": jnp.float32(0)}
+        # The microbatch loop is UNROLLED (not lax.scan): scan would stack
+        # per-iteration backward residuals, and XLA SPMD mis-partitions
+        # slices of stacked residuals when the embedding table is
+        # tensor-sharded (verifier failure). Unrolling keeps residuals
+        # per-microbatch and lets remat policies bound the live set.
+        (gsum, lsum, msum), _ = jax.lax.scan(
+            accum, (zeros, jnp.float32(0), zero_metrics), mb,
+            unroll=microbatches)
+        grads = jax.tree.map(lambda g: g / microbatches, gsum)
+
+        error = state.error
+        if use_compression:
+            grads, error = compression.compress_grads_ef(grads, error)
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            oc, grads, state.params, state.opt)
+        metrics = {"loss": lsum / microbatches,
+                   **{k: v / microbatches for k, v in msum.items()},
+                   **opt_metrics}
+        return TrainState(new_params, new_opt, rng, error), metrics
+
+    return train_step

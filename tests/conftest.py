@@ -1,0 +1,13 @@
+import os
+
+# Tests run on the single host CPU device (the dry-run, and only the dry-run,
+# forces 512 devices — in its own subprocess).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.key(0)

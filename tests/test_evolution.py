@@ -1,0 +1,142 @@
+"""NSGA-II + island model correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.evolution import (NSGA2Config, init_archive, merge, pareto_front,
+                             run_generational, run_islands)
+from repro.evolution import nsga2
+from repro.evolution.ga import init_state, evaluate_initial, make_step
+
+
+def brute_force_ranks(obj):
+    n = obj.shape[0]
+    dom = np.zeros((n, n), bool)
+    for i in range(n):
+        for j in range(n):
+            dom[i, j] = (obj[j] <= obj[i]).all() and (obj[j] < obj[i]).any()
+    ranks = np.full(n, -1)
+    r, remaining = 0, set(range(n))
+    while remaining:
+        front = [i for i in remaining
+                 if not any(dom[i, j] for j in remaining)]
+        for i in front:
+            ranks[i] = r
+        remaining -= set(front)
+        r += 1
+    return ranks
+
+
+def test_nondominated_ranks_vs_bruteforce():
+    obj = np.asarray(jax.random.uniform(jax.random.key(0), (40, 3)))
+    got = np.asarray(nsga2.nondominated_ranks(jnp.asarray(obj)))
+    np.testing.assert_array_equal(got, brute_force_ranks(obj))
+
+
+def test_ranks_with_invalid_rows():
+    obj = jnp.array([[0.5, 0.5], [0.1, 0.9], [0.0, 0.0], [9., 9.]])
+    valid = jnp.array([True, True, True, False])
+    ranks = np.asarray(nsga2.nondominated_ranks(obj, valid))
+    assert ranks[2] == 0          # dominates everything
+    assert ranks[3] >= 3 or ranks[3] == 4  # invalid gets no front
+
+
+def test_crowding_boundaries_infinite():
+    obj = jnp.array([[0., 3.], [1., 2.], [2., 1.], [3., 0.]])
+    ranks = jnp.zeros((4,), jnp.int32)
+    crowd = np.asarray(nsga2.crowding_distance(obj, ranks))
+    assert np.isinf(crowd[0]) and np.isinf(crowd[3])
+    assert np.isfinite(crowd[1]) and np.isfinite(crowd[2])
+
+
+def test_sbx_and_mutation_respect_bounds():
+    cfg = NSGA2Config(mu=8, genome_dim=3,
+                      bounds=((0., 1.), (-5., 5.), (2., 3.)))
+    lo, hi = cfg.lo(), cfg.hi()
+    key = jax.random.key(0)
+    p1 = jax.random.uniform(key, (64, 3)) * (hi - lo) + lo
+    p2 = jax.random.uniform(jax.random.key(1), (64, 3)) * (hi - lo) + lo
+    child = nsga2.sbx_crossover(jax.random.key(2), p1, p2, lo, hi, 15.0)
+    assert (np.asarray(child) >= np.asarray(lo) - 1e-6).all()
+    assert (np.asarray(child) <= np.asarray(hi) + 1e-6).all()
+    mut = nsga2.polynomial_mutation(jax.random.key(3), child, lo, hi, 20.0, 0.5)
+    assert (np.asarray(mut) >= np.asarray(lo) - 1e-6).all()
+    assert (np.asarray(mut) <= np.asarray(hi) + 1e-6).all()
+
+
+def _zdt1(keys, genomes):
+    x0 = genomes[:, 0]
+    g = 1 + 9 * genomes[:, 1:].mean(axis=1)
+    f2 = g * (1 - jnp.sqrt(jnp.clip(x0 / g, 0, 1)))
+    return jnp.stack([x0, f2], axis=1)
+
+
+def test_generational_ga_converges_on_zdt1():
+    d = 5
+    cfg = NSGA2Config(mu=32, genome_dim=d, bounds=((0., 1.),) * d,
+                      n_objectives=2)
+    state = run_generational(cfg, _zdt1, jax.random.key(0), lam=32,
+                             generations=40)
+    obj = np.asarray(state.objectives)
+    err = np.abs(obj[:, 1] - (1 - np.sqrt(np.clip(obj[:, 0], 0, 1))))
+    assert err.mean() < 0.25, err.mean()
+    assert int(state.evaluations) == 32 + 40 * 32
+
+
+def test_ga_step_monotone_hypervolume_proxy():
+    """Selection never makes the best f1 worse (elitism)."""
+    d = 4
+    cfg = NSGA2Config(mu=16, genome_dim=d, bounds=((0., 1.),) * d,
+                      n_objectives=2)
+    state = init_state(cfg, jax.random.key(5))
+    state = evaluate_initial(cfg, state, _zdt1)
+    step = jax.jit(make_step(cfg, _zdt1, lam=16))
+    best = float(state.objectives[:, 0].min())
+    for _ in range(10):
+        state = step(state)
+        new_best = float(state.objectives[:, 0].min())
+        assert new_best <= best + 1e-6
+        best = new_best
+
+
+def test_island_model_beats_single_island_budget_matched():
+    d = 5
+    cfg = NSGA2Config(mu=16, genome_dim=d, bounds=((0., 1.),) * d,
+                      n_objectives=2)
+    state = run_islands(cfg, _zdt1, jax.random.key(1), n_islands=4, lam=16,
+                        steps_per_epoch=5, epochs=4, archive_size=64)
+    mask = np.asarray(pareto_front(state.archive))
+    obj = np.asarray(state.archive.objectives)[mask]
+    err = np.abs(obj[:, 1] - (1 - np.sqrt(np.clip(obj[:, 0], 0, 1))))
+    assert err.mean() < 0.25
+    assert mask.sum() > 8
+
+
+def test_archive_merge_keeps_nondominated():
+    arch = init_archive(8, 2, 2)
+    genomes = jnp.arange(12, dtype=jnp.float32).reshape(6, 2)
+    # points on a front + dominated stragglers
+    objs = jnp.array([[0., 3.], [1., 2.], [2., 1.], [3., 0.],
+                      [5., 5.], [6., 6.]])
+    arch = merge(arch, genomes, objs)
+    front = np.asarray(pareto_front(arch))
+    kept = np.asarray(arch.objectives)[front]
+    for p in [[0., 3.], [1., 2.], [2., 1.], [3., 0.]]:
+        assert (kept == np.array(p)).all(1).any()
+    # dominated points must not be on the archive front
+    assert not (kept == np.array([5., 5.])).all(1).any()
+
+
+def test_reevaluate_slots_copy_parents():
+    cfg = NSGA2Config(mu=8, genome_dim=2, bounds=((0., 1.),) * 2,
+                      n_objectives=2, reevaluate=1.0)  # force all slots
+    genomes = jax.random.uniform(jax.random.key(0), (8, 2))
+    ranks = jnp.zeros((8,), jnp.int32)
+    crowd = jnp.ones((8,))
+    children, reeval = nsga2.make_offspring(cfg, jax.random.key(1), genomes,
+                                            ranks, crowd, 16)
+    assert bool(reeval.all())
+    g = np.asarray(genomes)
+    for c in np.asarray(children):
+        assert (np.abs(g - c).sum(1) < 1e-6).any()   # verbatim parent copy

@@ -1,0 +1,146 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.evolution import nsga2
+from repro.kernels import ref
+from repro.kernels.dominance import dominated_counts as dom_pallas
+from repro.train.compression import dequantize_int8, quantize_int8
+
+SET = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# dominance: kernel == oracle, and structural invariants
+# ---------------------------------------------------------------------------
+@settings(**SET)
+@given(n=st.integers(4, 80), m=st.integers(2, 5), seed=st.integers(0, 10 ** 6))
+def test_dominance_kernel_matches_oracle(n, m, seed):
+    f = jax.random.uniform(jax.random.key(seed), (n, m), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(dom_pallas(f, block=16, interpret=True)),
+        np.asarray(ref.dominated_counts_ref(f)))
+
+
+@settings(**SET)
+@given(n=st.integers(4, 40), m=st.integers(2, 4), seed=st.integers(0, 10 ** 6))
+def test_rank0_points_are_never_dominated(n, m, seed):
+    f = jax.random.uniform(jax.random.key(seed), (n, m), jnp.float32)
+    ranks = np.asarray(nsga2.nondominated_ranks(f))
+    counts = np.asarray(ref.dominated_counts_ref(f))
+    assert ((ranks == 0) == (counts == 0)).all()
+
+
+@settings(**SET)
+@given(n=st.integers(4, 30), seed=st.integers(0, 10 ** 6))
+def test_adding_a_dominated_point_preserves_front(n, seed):
+    f = np.asarray(jax.random.uniform(jax.random.key(seed), (n, 3)))
+    worst = f.max(0) + 1.0
+    f2 = np.vstack([f, worst])
+    r1 = np.asarray(nsga2.nondominated_ranks(jnp.asarray(f)))
+    r2 = np.asarray(nsga2.nondominated_ranks(jnp.asarray(f2)))
+    np.testing.assert_array_equal(r1 == 0, (r2 == 0)[:n])
+    assert r2[-1] != 0
+
+
+# ---------------------------------------------------------------------------
+# genetic operators: bounds are invariant
+# ---------------------------------------------------------------------------
+@settings(**SET)
+@given(seed=st.integers(0, 10 ** 6), eta=st.floats(1.0, 40.0),
+       p=st.floats(0.0, 1.0))
+def test_variation_respects_bounds(seed, eta, p):
+    lo = jnp.array([0.0, -3.0])
+    hi = jnp.array([1.0, 7.0])
+    k1, k2, k3, k4 = jax.random.split(jax.random.key(seed), 4)
+    p1 = jax.random.uniform(k1, (16, 2)) * (hi - lo) + lo
+    p2 = jax.random.uniform(k2, (16, 2)) * (hi - lo) + lo
+    c = nsga2.sbx_crossover(k3, p1, p2, lo, hi, eta)
+    m = nsga2.polynomial_mutation(k4, c, lo, hi, eta, p)
+    for arr in (c, m):
+        a = np.asarray(arr)
+        assert (a >= np.asarray(lo) - 1e-5).all()
+        assert (a <= np.asarray(hi) + 1e-5).all()
+
+
+# ---------------------------------------------------------------------------
+# int8 compression: error bounded by half a quantization step
+# ---------------------------------------------------------------------------
+@settings(**SET)
+@given(n=st.integers(1, 2000), scale=st.floats(1e-3, 1e3),
+       seed=st.integers(0, 10 ** 6))
+def test_quantization_error_bound(n, scale, seed):
+    x = jax.random.normal(jax.random.key(seed), (n,)) * scale
+    q, s = quantize_int8(x)
+    out = dequantize_int8(q, s, x.shape)
+    err = np.abs(np.asarray(out) - np.asarray(x))
+    step = np.asarray(s).repeat(256)[:n]
+    assert (err <= step * 0.5 + 1e-6 * scale).all()
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 10 ** 6))
+def test_quantization_idempotent(seed):
+    x = jax.random.normal(jax.random.key(seed), (300,))
+    q, s = quantize_int8(x)
+    deq = dequantize_int8(q, s, x.shape)
+    q2, s2 = quantize_int8(deq)
+    deq2 = dequantize_int8(q2, s2, x.shape)
+    np.testing.assert_allclose(np.asarray(deq), np.asarray(deq2),
+                               atol=1e-6, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# diffusion: mass conservation and linearity
+# ---------------------------------------------------------------------------
+@settings(**SET)
+@given(w=st.integers(8, 40), rate=st.floats(0.0, 1.0),
+       seed=st.integers(0, 10 ** 6))
+def test_diffusion_mass_conserved(w, rate, seed):
+    chem = jax.random.uniform(jax.random.key(seed), (1, w, w)) * 5
+    out = ref.diffuse_evaporate_ref(chem, jnp.array([rate]), jnp.array([0.0]))
+    np.testing.assert_allclose(float(out.sum()), float(chem.sum()), rtol=1e-5)
+
+
+@settings(**SET)
+@given(rate=st.floats(0.0, 1.0), evap=st.floats(0.0, 1.0),
+       seed=st.integers(0, 10 ** 6))
+def test_diffusion_linearity(rate, evap, seed):
+    chem = jax.random.uniform(jax.random.key(seed), (1, 16, 16))
+    r, e = jnp.array([rate]), jnp.array([evap])
+    a = ref.diffuse_evaporate_ref(2.0 * chem, r, e)
+    b = 2.0 * ref.diffuse_evaporate_ref(chem, r, e)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# sharding resolver invariants
+# ---------------------------------------------------------------------------
+@settings(**SET)
+@given(dims=st.lists(st.sampled_from([1, 3, 9, 16, 64, 122753, 2048]),
+                     min_size=1, max_size=4),
+       names=st.lists(st.sampled_from(["batch", "vocab", "heads", "mlp",
+                                       "embed", None]),
+                      min_size=4, max_size=4),
+       fsdp=st.booleans())
+def test_resolver_specs_always_legal(dims, names, fsdp):
+    from jax.sharding import AbstractMesh
+    from repro.runtime.sharding import logical_to_spec
+    mesh = AbstractMesh((2, 4, 4), ("pod", "data", "model"))
+    shape = tuple(dims)
+    axes = tuple(names[:len(shape)])
+    spec = logical_to_spec(axes, shape, mesh, fsdp=fsdp)
+    used = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            continue
+        group = entry if isinstance(entry, tuple) else (entry,)
+        prod = 1
+        for ax in group:
+            assert ax not in used, "mesh axis used twice"
+            used.append(ax)
+            prod *= dict(mesh.shape)[ax]
+        assert shape[i] % prod == 0, "divisibility violated"

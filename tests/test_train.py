@@ -1,0 +1,126 @@
+"""Training mechanics: schedules, grad accumulation, compression, clipping."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build
+from repro.train import (OptimizerConfig, TrainState, init_train_state,
+                         make_train_step)
+from repro.train.compression import (compress_grads_ef, dequantize_int8,
+                                     init_error_buffers, quantize_int8)
+from repro.train.optimizer import schedule_fn
+
+
+def _model():
+    cfg = dataclasses.replace(get_config("smollm-135m", reduced=True),
+                              dtype="float32", use_flash_kernel=False)
+    return build(cfg), cfg
+
+
+def _batch(cfg, b=4, s=32, seed=0):
+    return {"tokens": jax.random.randint(jax.random.key(seed), (b, s + 1), 0,
+                                         cfg.vocab_size)}
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+def test_wsd_schedule_shape():
+    oc = OptimizerConfig(learning_rate=1.0, warmup_steps=10, total_steps=100,
+                         schedule="wsd", decay_frac=0.2, min_lr_frac=0.1)
+    f = schedule_fn(oc)
+    lrs = np.array([float(f(jnp.int32(s))) for s in range(101)])
+    assert lrs[0] == 0.0
+    np.testing.assert_allclose(lrs[10:80], 1.0, atol=1e-6)   # stable phase
+    assert lrs[100] == pytest.approx(0.1, abs=1e-6)          # decayed
+    assert (np.diff(lrs[80:]) <= 1e-9).all()                 # monotone decay
+
+
+def test_cosine_schedule_endpoints():
+    oc = OptimizerConfig(learning_rate=2.0, warmup_steps=5, total_steps=50,
+                         schedule="cosine", min_lr_frac=0.1)
+    f = schedule_fn(oc)
+    assert float(f(jnp.int32(5))) == pytest.approx(2.0 * (0.1 + 0.9 * 0.5 *
+                                                   (1 + np.cos(np.pi * 0.1))), rel=1e-4)
+    assert float(f(jnp.int32(50))) == pytest.approx(0.2, rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# gradient accumulation
+# ---------------------------------------------------------------------------
+def test_grad_accumulation_invariance():
+    """mb=1 vs mb=4 must produce (nearly) identical updates."""
+    model, cfg = _model()
+    oc = OptimizerConfig(learning_rate=1e-3, total_steps=10, warmup_steps=0)
+    batch = _batch(cfg, b=4, s=32)
+    s1, _ = init_train_state(model, jax.random.key(0))
+    s2 = jax.tree.map(lambda x: x, s1)
+    out1, m1 = jax.jit(make_train_step(model, oc, microbatches=1))(s1, batch)
+    out4, m4 = jax.jit(make_train_step(model, oc, microbatches=4))(s2, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(m1["grad_norm"]), float(m4["grad_norm"]),
+                               rtol=1e-5)
+    d = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()),
+                     out1.params, out4.params)
+    assert max(jax.tree.leaves(d)) < 1e-4   # f32 summation-order noise only
+
+
+def test_grad_clipping_bounds_moment_norm():
+    """Adam's update is scale-invariant, so clipping is visible on the first
+    moment: ||mu_1|| = (1-b1) * ||g_clipped|| <= (1-b1) * clip."""
+    model, cfg = _model()
+    clip = 1e-3
+    oc = OptimizerConfig(learning_rate=1.0, grad_clip=clip, total_steps=10,
+                         warmup_steps=0, weight_decay=0.0, beta1=0.9)
+    batch = _batch(cfg)
+    s, _ = init_train_state(model, jax.random.key(0))
+    out, m = jax.jit(make_train_step(model, oc, 1))(s, batch)
+    assert float(m["grad_norm"]) > clip          # clipping was active
+    mu_norm = float(jnp.sqrt(sum(jnp.sum(jnp.square(x))
+                                 for x in jax.tree.leaves(out.opt.mu))))
+    assert mu_norm <= (1 - 0.9) * clip * 1.01, mu_norm
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+def test_quantize_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.key(0), (1000,)) * 3
+    q, s = quantize_int8(x)
+    out = dequantize_int8(q, s, x.shape)
+    err = np.abs(np.asarray(out - x))
+    per_block_scale = np.asarray(s).repeat(256)[:1000]
+    assert (err <= per_block_scale * 0.5 + 1e-7).all()
+
+
+def test_error_feedback_is_unbiased_over_steps():
+    """Summing EF-compressed gradients over steps converges to the true sum."""
+    g = jax.random.normal(jax.random.key(1), (512,)) * 0.1
+    grads = {"w": g}
+    err = init_error_buffers(grads)
+    total = jnp.zeros_like(g)
+    for _ in range(50):
+        deq, err = compress_grads_ef(grads, err)
+        total = total + deq["w"]
+    np.testing.assert_allclose(np.asarray(total), np.asarray(g * 50),
+                               rtol=0.02, atol=0.02)
+
+
+def test_compressed_training_still_learns():
+    from repro.data import DataConfig, TokenStream
+    model, cfg = _model()
+    oc = OptimizerConfig(learning_rate=3e-3, total_steps=25, warmup_steps=2)
+    s, _ = init_train_state(model, jax.random.key(0), use_compression=True)
+    step = jax.jit(make_train_step(model, oc, 1, use_compression=True))
+    stream = TokenStream(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                    global_batch=4))
+    losses = []
+    for i in range(25):
+        s, m = step(s, {"tokens": jnp.asarray(stream.batch_at(i))})
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1

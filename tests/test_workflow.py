@@ -1,0 +1,189 @@
+"""Workflow engine: dataflow, transitions, hooks, environments, DSL."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (Capsule, Context, CSVHook, DisplayHook, JaxTask,
+                        LocalEnvironment, PyTask, TaskError, ToStringHook,
+                        Val, Workflow, aggregate, explore, puzzle)
+from repro.explore import (GridSampling, LHSSampling, SeedSampling,
+                           SobolSampling, StatisticTask, UniformSampling,
+                           median)
+
+x = Val("x", float)
+y = Val("y", float)
+z = Val("z", float)
+
+
+def test_task_runs_and_validates_outputs():
+    t = PyTask("sq", lambda ctx: {"y": ctx["x"] ** 2}, inputs=(x,), outputs=(y,))
+    out = t.run(Context(x=3.0))
+    assert out["y"] == 9.0
+
+
+def test_task_missing_input_raises():
+    t = PyTask("sq", lambda ctx: {"y": 1.0}, inputs=(x,), outputs=(y,))
+    with pytest.raises(TaskError, match="missing inputs"):
+        t.run(Context())
+
+
+def test_task_missing_output_raises():
+    t = PyTask("bad", lambda ctx: {}, outputs=(y,))
+    with pytest.raises(TaskError, match="missing outputs"):
+        t.run(Context())
+
+
+def test_defaults_fill_inputs():
+    t = PyTask("sq", lambda ctx: {"y": ctx["x"] * 2}, inputs=(x,),
+               outputs=(y,), defaults={"x": 21.0})
+    assert t.run(Context())["y"] == 42.0
+    assert t.set(x=1.0).run(Context())["y"] == 2.0
+
+
+def test_simple_chain_dataflow():
+    t1 = PyTask("a", lambda ctx: {"y": ctx["x"] + 1}, inputs=(x,), outputs=(y,))
+    t2 = PyTask("b", lambda ctx: {"z": ctx["y"] * 10}, inputs=(y,), outputs=(z,))
+    c1, c2 = Capsule(t1), Capsule(t2)
+    res = (puzzle(c1) >> c2).run({"x": 4.0})
+    assert res[c2][0]["z"] == 50.0
+    # union semantics: upstream values still visible downstream
+    assert res[c2][0]["x"] == 4.0
+
+
+def test_exploration_and_aggregation():
+    sq = PyTask("sq", lambda ctx: {"y": ctx["x"] ** 2}, inputs=(x,), outputs=(y,))
+    med = StatisticTask("med", [(y, z, median)])
+    head = Capsule(PyTask("head", lambda ctx: {}))
+    sq_c, med_c = Capsule(sq), Capsule(med)
+    sampling = GridSampling({x: [1.0, 2.0, 3.0, 4.0, 5.0]})
+    res = (puzzle(head) >> explore(sampling) >> sq_c
+           >> aggregate() >> med_c).run()
+    assert res[med_c][0]["z"] == 9.0          # median of 1,4,9,16,25
+
+
+def test_condition_filters_contexts():
+    wf = Workflow()
+    t1 = PyTask("gen", lambda ctx: {"y": ctx["x"]}, inputs=(x,), outputs=(y,))
+    t2 = PyTask("sink", lambda ctx: {"z": ctx["y"]}, inputs=(y,), outputs=(z,))
+    head = Capsule(PyTask("head", lambda ctx: {}))
+    c1, c2 = Capsule(t1), Capsule(t2)
+    wf.connect(head, c1, kind="exploration",
+               sampling=GridSampling({x: [1.0, 2.0, 3.0, 4.0]}))
+    wf.connect(c1, c2, condition=lambda ctx: ctx["y"] > 2)
+    res = wf.run()
+    assert len(res[c2]) == 2
+
+
+def test_validate_reports_unwired_inputs():
+    wf = Workflow()
+    t1 = PyTask("a", lambda ctx: {"y": 1.0}, outputs=(y,))
+    t2 = PyTask("b", lambda ctx: {"z": ctx["q"]}, inputs=(Val("q"),),
+                outputs=(z,))
+    c1, c2 = Capsule(t1), Capsule(t2)
+    wf.connect(c1, c2)
+    warnings = wf.validate()
+    assert any("q" in w for w in warnings)
+
+
+def test_cycle_detection():
+    wf = Workflow()
+    t = PyTask("a", lambda ctx: {})
+    c1, c2 = Capsule(t), Capsule(t)
+    wf.connect(c1, c2)
+    wf.connect(c2, c1)
+    with pytest.raises(ValueError, match="cycle"):
+        wf.run()
+
+
+def test_hooks_fire_per_context():
+    t = PyTask("a", lambda ctx: {"y": ctx["x"]}, inputs=(x,), outputs=(y,))
+    hook = ToStringHook(y, printer=lambda s: None)
+    head = Capsule(PyTask("head", lambda ctx: {}))
+    c = Capsule(t).hook(hook)
+    (puzzle(head) >> explore(GridSampling({x: [1.0, 2.0, 3.0]})) >> c).run()
+    assert len(hook.seen) == 3
+
+
+def test_csv_hook_writes_rows(tmp_path):
+    path = str(tmp_path / "out.csv")
+    hook = CSVHook(path, [x, y])
+    hook(Context(x=1.0, y=2.0))
+    hook(Context(x=3.0, y=4.0))
+    rows = open(path).read().strip().splitlines()
+    assert rows[0] == "x,y" and len(rows) == 3
+
+
+def test_display_hook_templating(capsys):
+    DisplayHook("Generation ${gen}")(Context(gen=7))
+    assert "Generation 7" in capsys.readouterr().out
+
+
+def test_retry_recovers_from_transient_failures():
+    calls = {"n": 0}
+
+    def flaky(ctx):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise IOError("transient")
+        return {"y": 1.0}
+
+    env = LocalEnvironment(retries=3, backoff_s=0.0)
+    out = env.submit(PyTask("flaky", flaky, outputs=(y,)), Context())
+    assert out["y"] == 1.0
+    assert env.stats.retried == 2
+
+
+def test_speculative_first_result_wins():
+    def slow_then_fast(ctx):
+        return {"y": 1.0}
+
+    env = LocalEnvironment(speculative=3)
+    out = env.submit(PyTask("dup", slow_then_fast, outputs=(y,)), Context())
+    assert out["y"] == 1.0
+    assert env.stats.speculative_wins >= 1
+
+
+def test_samplings_cover_bounds_and_sizes():
+    for s in [UniformSampling({x: (0., 1.)}, 17, seed=1),
+              LHSSampling({x: (0., 1.)}, 17, seed=1),
+              SobolSampling({x: (0., 1.)}, 17, seed=1)]:
+        pts = [c["x"] for c in s.contexts(Context())]
+        assert len(pts) == 17 == len(s)
+        assert all(0 <= p <= 1 for p in pts)
+
+
+def test_lhs_stratification():
+    s = LHSSampling({x: (0., 1.)}, 10, seed=0)
+    pts = sorted(c["x"] for c in s.contexts(Context()))
+    # exactly one point per decile
+    for i, p in enumerate(pts):
+        assert i / 10 <= p <= (i + 1) / 10
+
+
+def test_sobol_low_discrepancy_beats_uniform_worst_gap():
+    n = 64
+    sob = sorted(c["x"] for c in
+                 SobolSampling({x: (0., 1.)}, n, seed=0).contexts(Context()))
+    gaps = np.diff([0] + sob + [1])
+    assert gaps.max() < 0.1
+
+
+def test_cross_sampling():
+    s = GridSampling({x: [1., 2.]}) * GridSampling({y: [10., 20., 30.]})
+    pts = list(s.contexts(Context()))
+    assert len(pts) == 6 == len(s)
+    assert {(p["x"], p["y"]) for p in pts} == {
+        (1., 10.), (1., 20.), (1., 30.), (2., 10.), (2., 20.), (2., 30.)}
+
+
+def test_seed_sampling_deterministic():
+    a = [c["seed"] for c in SeedSampling(Val("seed"), 5, seed=3).contexts(Context())]
+    b = [c["seed"] for c in SeedSampling(Val("seed"), 5, seed=3).contexts(Context())]
+    assert a == b and len(set(a)) == 5
+
+
+def test_sobol_points_unique():
+    s = SobolSampling({x: (0., 1.), y: (0., 1.)}, 32, seed=2)
+    pts = [(c["x"], c["y"]) for c in s.contexts(Context())]
+    assert len(set(pts)) == 32
