@@ -9,4 +9,7 @@ from repro.core.source import (Source, ConstantSource, CSVSource,  # noqa
                                FunctionSource)
 from repro.core.environment import (Environment, LocalEnvironment,  # noqa
                                     MeshEnvironment, EGIEnvironment)
+from repro.core.cache import (TaskCache, DEFAULT_CACHE,            # noqa
+                              fingerprint_task, inputs_digest)
+from repro.core.scheduler import RunRecord, TaskRecord             # noqa
 from repro.core.dsl import Puzzle, puzzle, explore, aggregate      # noqa

@@ -86,8 +86,21 @@ class Puzzle:
         wf.transitions.extend(other.workflow.transitions)
         return Puzzle(wf, self.tails + other.tails)
 
-    def run(self, initial=None, environment: Optional[Environment] = None):
-        return self.workflow.run(Context(initial or {}), environment)
+    def run(self, initial=None, environment: Optional[Environment] = None,
+            **kwargs):
+        """Seal the puzzle and execute its workflow.
+
+        Args:
+            initial: seed Context for root capsules.
+            environment: default Environment for all capsules.
+            **kwargs: forwarded to :meth:`Workflow.run` — ``scheduler=``,
+                ``cache=``, ``provenance_path=``, ``max_workers=``.
+
+        Returns:
+            Dict of Capsule -> list of merged output Contexts.
+        """
+        return self.workflow.run(Context(initial or {}), environment,
+                                 **kwargs)
 
     # paper spelling: `val ex = workflow start`
     start = run

@@ -16,8 +16,9 @@ from __future__ import annotations
 
 import concurrent.futures as cf
 import dataclasses
+import threading
 import time
-from typing import Any, Callable, Dict, Optional, Sequence
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -36,29 +37,88 @@ class EnvStats:
 
 
 class Environment:
-    """Base: synchronous local execution with retry."""
+    """Base execution environment: local execution with retry, speculation,
+    and a futures-based async submission path for the dataflow scheduler.
+
+    Args:
+        retries: transient-failure retries per task submission (exponential
+            backoff; ``TaskError`` declaration bugs never retry).
+        backoff_s: base backoff between retries (doubles per attempt).
+        speculative: >1 over-submits host-side PyTasks that many times and
+            keeps the first result (GridScale's EGI trick).
+        async_workers: thread-pool width for ``submit_async`` (default 8).
+    """
 
     name = "local"
 
     def __init__(self, *, retries: int = 2, backoff_s: float = 0.1,
-                 speculative: int = 1):
+                 speculative: int = 1, async_workers: int = 8):
         self.retries = retries
         self.backoff_s = backoff_s
         self.speculative = speculative
+        self.async_workers = async_workers
         self.stats = EnvStats()
         self._pool: Optional[cf.ThreadPoolExecutor] = None
+        self._async_pool: Optional[cf.ThreadPoolExecutor] = None
+        self._lock = threading.Lock()
 
     # -- single task ---------------------------------------------------------
     def submit(self, task: Task, context: Context) -> Context:
-        self.stats.submitted += 1
+        """Run one task synchronously (with retry/speculation).
+
+        Args:
+            task: the Task to execute.
+            context: its input Context.
+
+        Returns:
+            The task's validated output Context (outputs only, not merged
+            with the inputs — the workflow layer does the union).
+        """
+        return self.submit_traced(task, context)[0]
+
+    def submit_traced(self, task: Task, context: Context
+                      ) -> Tuple[Context, Dict[str, Any]]:
+        """Like :meth:`submit`, but also returns execution metadata.
+
+        Returns:
+            ``(output, meta)`` where ``meta`` has keys ``retries`` (int),
+            ``speculative`` (bool), ``t0`` (monotonic start time), and
+            ``wall_s`` (float) — consumed by the scheduler's provenance
+            records (core/scheduler.py).
+        """
+        meta: Dict[str, Any] = {"retries": 0, "speculative": False,
+                                "t0": time.monotonic(), "wall_s": 0.0}
+        with self._lock:
+            self.stats.submitted += 1
         if task.kind == "py" and self.speculative > 1:
             out = self._speculative_run(task, context)
+            meta["speculative"] = True
         else:
-            out = self._run_with_retry(task, context)
-        self.stats.completed += 1
-        return out
+            out = self._run_with_retry(task, context, meta)
+        with self._lock:
+            self.stats.completed += 1
+        meta["wall_s"] = time.monotonic() - meta["t0"]
+        return out, meta
 
-    def _run_with_retry(self, task: Task, context: Context) -> Context:
+    def submit_async(self, task: Task, context: Context) -> "cf.Future":
+        """Submit one task to the environment's thread pool.
+
+        Returns:
+            A future resolving to ``(output Context, meta dict)`` exactly as
+            :meth:`submit_traced` would return. The async dataflow scheduler
+            uses this to overlap host-side PyTasks within and across
+            capsules; device-side JaxTask fan-outs go through
+            :meth:`map_explore` instead (batched SPMD lanes).
+        """
+        with self._lock:
+            if self._async_pool is None:
+                self._async_pool = cf.ThreadPoolExecutor(
+                    max_workers=self.async_workers,
+                    thread_name_prefix=f"repro-env-{self.name}")
+        return self._async_pool.submit(self.submit_traced, task, context)
+
+    def _run_with_retry(self, task: Task, context: Context,
+                        meta: Optional[Dict[str, Any]] = None) -> Context:
         err = None
         for attempt in range(self.retries + 1):
             try:
@@ -67,7 +127,10 @@ class Environment:
                 raise                      # declaration bugs don't retry
             except Exception as e:         # transient (I/O, preemption)
                 err = e
-                self.stats.retried += 1
+                with self._lock:
+                    self.stats.retried += 1
+                if meta is not None:
+                    meta["retries"] += 1
                 time.sleep(self.backoff_s * (2 ** attempt))
         raise RuntimeError(
             f"task {task.name} failed after {self.retries + 1} attempts") \
@@ -76,15 +139,18 @@ class Environment:
     def _speculative_run(self, task: Task, context: Context) -> Context:
         """First-result-wins over `speculative` duplicate submissions —
         straggler mitigation exactly as OpenMOLE over-submits on EGI."""
-        if self._pool is None:
-            self._pool = cf.ThreadPoolExecutor(max_workers=8)
-        futures = [self._pool.submit(task.run, context)
+        with self._lock:
+            if self._pool is None:
+                self._pool = cf.ThreadPoolExecutor(max_workers=8)
+            pool = self._pool
+        futures = [pool.submit(task.run, context)
                    for _ in range(self.speculative)]
         err = None
         for f in cf.as_completed(futures):
             try:
                 result = f.result()
-                self.stats.speculative_wins += 1
+                with self._lock:
+                    self.stats.speculative_wins += 1
                 for other in futures:
                     other.cancel()
                 return result
@@ -95,14 +161,27 @@ class Environment:
 
     # -- vectorized exploration ------------------------------------------------
     def map_explore(self, task: Task, contexts: Sequence[Context]):
-        """Default: run contexts one by one (a laptop-sized DoE)."""
+        """Run one task over many contexts (an exploration fan-out).
+
+        Args:
+            task: the Task to evaluate at every point.
+            contexts: input Contexts, one per design-of-experiments point.
+
+        Returns:
+            A list of output Contexts in the same order. The base
+            environment runs them one by one (a laptop-sized DoE);
+            MeshEnvironment batches JaxTasks into sharded vmap lanes.
+        """
         return [self.submit(task, c) for c in contexts]
 
     def jit(self, fn, **kw):
+        """Compile ``fn`` for this environment (plain ``jax.jit`` locally;
+        mesh environments install their mesh around the call)."""
         return jax.jit(fn, **kw)
 
     @property
     def mesh(self):
+        """The device mesh backing this environment (None for local)."""
         return None
 
     def __repr__(self):
@@ -168,8 +247,9 @@ class MeshEnvironment(Environment):
                 return jax.vmap(one)(batch)
 
         out = jax.jit(run)(batched)
-        self.stats.submitted += n_lanes
-        self.stats.completed += n_lanes
+        with self._lock:
+            self.stats.submitted += n_lanes
+            self.stats.completed += n_lanes
         out_host = jax.tree.map(np.asarray, out)
         results = []
         for i in range(n_lanes):

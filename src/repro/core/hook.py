@@ -1,12 +1,18 @@
 """Hooks — "Tasks are mute pieces of software ... OpenMOLE introduces a
 mechanism called Hooks to save or display results generated on remote
 environments" (paper §4.3). Hooks run host-side after a capsule completes.
+
+Under the async dataflow scheduler (core/scheduler.py) a hook attached to
+several capsules can fire from concurrent worker threads, so hooks that
+append to shared files or counters guard their critical section with a
+lock. Within one capsule, hooks still fire sequentially in context order.
 """
 from __future__ import annotations
 
 import csv
 import json
 import os
+import threading
 from typing import Any, Callable, Optional, Sequence
 
 import numpy as np
@@ -15,6 +21,9 @@ from repro.core.prototype import Context, Val
 
 
 class Hook:
+    """Host-side observer: called with every merged output Context of the
+    capsule it is attached to (``capsule.hook(h)``)."""
+
     def __call__(self, context: Context) -> None:
         raise NotImplementedError
 
@@ -53,15 +62,16 @@ class CSVHook(Hook):
     def __init__(self, path: str, vals: Sequence[Val]):
         self.path = path
         self.vals = vals
+        self._lock = threading.Lock()
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         if not os.path.exists(path):
             with open(path, "w", newline="") as f:
                 csv.writer(f).writerow([v.name for v in vals])
 
     def __call__(self, context: Context) -> None:
-        with open(self.path, "a", newline="") as f:
-            csv.writer(f).writerow(
-                [np.asarray(context[v.name]).tolist() for v in self.vals])
+        row = [np.asarray(context[v.name]).tolist() for v in self.vals]
+        with self._lock, open(self.path, "a", newline="") as f:
+            csv.writer(f).writerow(row)
 
 
 class SavePopulationHook(Hook):
@@ -70,10 +80,15 @@ class SavePopulationHook(Hook):
 
     def __init__(self, directory: str):
         self.directory = directory
+        self._lock = threading.Lock()
         os.makedirs(directory, exist_ok=True)
         self.generations_saved = 0
 
     def __call__(self, context: Context) -> None:
+        with self._lock:
+            self._save(context)
+
+    def _save(self, context: Context) -> None:
         gen = int(np.asarray(context.get("generation", self.generations_saved)))
         genomes = np.asarray(context["genomes"])
         objectives = np.asarray(context["objectives"])
@@ -99,8 +114,11 @@ class CheckpointHook(Hook):
         self.val = val
         self.every = every
         self.calls = 0
+        self._lock = threading.Lock()
 
     def __call__(self, context: Context) -> None:
-        if self.calls % self.every == 0:
-            self._ckpt.save(self.directory, self.calls, context[self.val.name])
-        self.calls += 1
+        with self._lock:
+            if self.calls % self.every == 0:
+                self._ckpt.save(self.directory, self.calls,
+                                context[self.val.name])
+            self.calls += 1

@@ -28,6 +28,22 @@ class TaskError(RuntimeError):
 
 @dataclasses.dataclass
 class Task:
+    """A pure unit of computation in the dataflow.
+
+    Attributes:
+        name: unique label (appears in errors and provenance records).
+        fn: the computation, ``Context -> dict`` of declared outputs.
+        inputs: Vals the task consumes; missing ones raise at ``prepare``.
+        outputs: Vals the task must produce; checked after every run.
+        defaults: fallback values overlaid under the flowing context.
+        kind: "py" (host-side, eligible for speculation/threading) or
+            "jax" (device-side, eligible for batched vmap lanes).
+
+    Purity contract: ``fn`` must depend only on its input Context — that is
+    what makes delegation to remote environments *and* content-addressed
+    memoization (core/cache.py) sound.
+    """
+
     name: str
     fn: Callable[[Context], Dict[str, Any]]
     inputs: Tuple[Val, ...] = ()
@@ -36,6 +52,17 @@ class Task:
     kind: str = "py"                 # py | jax
 
     def prepare(self, context: Context) -> Context:
+        """Overlay ``context`` on the defaults and check declared inputs.
+
+        Args:
+            context: the flowing input Context.
+
+        Returns:
+            The effective input Context (defaults overlaid by ``context``).
+
+        Raises:
+            TaskError: if any declared input Val is absent.
+        """
         ctx = Context(self.defaults)
         ctx.update(context)
         missing = [v.name for v in self.inputs if v.name not in ctx]
@@ -44,6 +71,18 @@ class Task:
         return ctx
 
     def validate_outputs(self, out: Dict[str, Any]) -> Context:
+        """Check ``fn``'s return value against the output declaration.
+
+        Args:
+            out: the dict returned by ``fn``.
+
+        Returns:
+            The outputs as a Context.
+
+        Raises:
+            TaskError: if ``out`` is not a dict, a declared output is
+                missing, or a value fails its Val type check.
+        """
         if not isinstance(out, dict):
             raise TaskError(f"task {self.name}: fn must return a dict")
         missing = [v.name for v in self.outputs if v.name not in out]
@@ -57,11 +96,29 @@ class Task:
         return Context(out)
 
     def run(self, context: Context) -> Context:
+        """Prepare inputs, execute ``fn``, validate outputs.
+
+        Args:
+            context: the flowing input Context.
+
+        Returns:
+            The validated output Context (outputs only; the workflow layer
+            unions it with the inputs for downstream propagation).
+        """
         ctx = self.prepare(context)
         return self.validate_outputs(self.fn(ctx))
 
     # DSL sugar ------------------------------------------------------------
     def set(self, **defaults) -> "Task":
+        """Return a copy with extra default values (paper's ``set`` DSL).
+
+        Args:
+            **defaults: Val-name -> value pairs overlaid on the existing
+                defaults.
+
+        Returns:
+            A new Task; the original is unchanged.
+        """
         d = dict(self.defaults)
         d.update(defaults)
         return dataclasses.replace(self, defaults=d)

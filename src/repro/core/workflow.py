@@ -9,10 +9,15 @@ Semantics implemented:
   per-capsule environment override (``on``) — Listing 5's ``island on env``.
 - Transitions: simple (1 context -> 1), exploration (1 -> N via a Sampling),
   aggregation (N -> 1 with stacked values).
-- Execution: topological order; each capsule consumes a *list* of contexts
-  and emits a list. Vectorizable fan-outs are delegated to
+- Execution: delegated to the dataflow schedulers in core/scheduler.py.
+  The default ``scheduler="async"`` fires capsules as soon as their input
+  contexts arrive (independent branches overlap on a thread pool);
+  ``scheduler="serial"`` is the paper-faithful topological loop kept for
+  bit-exact comparison. Vectorizable fan-outs are delegated to
   ``environment.map_explore`` (mesh lanes); everything else runs through
-  ``environment.submit`` (with retry/speculation).
+  ``environment.submit_async``/``submit`` (with retry/speculation).
+- Memoization: pass ``cache=`` to skip already-computed (task, inputs)
+  points via the content-addressed TaskCache (core/cache.py).
 - Output contexts are the union of input and task outputs (dataflow
   propagation).
 """
@@ -29,6 +34,19 @@ from repro.core.task import Task
 
 
 class Capsule:
+    """Scheduling slot around a Task: hooks plus an optional per-capsule
+    environment override (Listing 5's ``island on env``).
+
+    The same Task can be wrapped by several Capsules (it then occupies
+    several slots in the DAG); each capsule is what the scheduler fires.
+
+    Args:
+        task: the Task this capsule executes.
+        hooks: host-side observers called with every merged output Context.
+        environment: overrides the workflow-level environment for this
+            capsule only (None = inherit).
+    """
+
     _ids = itertools.count()
 
     def __init__(self, task: Task, hooks: Sequence[Hook] = (),
@@ -39,10 +57,13 @@ class Capsule:
         self.id = next(Capsule._ids)
 
     def hook(self, h: Hook) -> "Capsule":
+        """Attach a Hook; returns self for chaining (``capsule hook h``)."""
         self.hooks.append(h)
         return self
 
     def on(self, env: Environment) -> "Capsule":
+        """Pin this capsule to a specific environment; returns self
+        (``capsule on env`` in the paper's DSL)."""
         self.environment = env
         return self
 
@@ -65,18 +86,43 @@ class Transition:
 
 
 class Workflow:
+    """A DAG of Capsules linked by Transitions, plus the run entry point.
+
+    Args:
+        name: label used in provenance records and error messages.
+
+    Attributes:
+        capsules: all scheduling slots in the DAG.
+        transitions: directed edges (simple / exploration / aggregation).
+        last_record: the RunRecord of the most recent :meth:`run` (None
+            before the first run) — per-task provenance and cache stats.
+    """
+
     def __init__(self, name: str = "workflow"):
         self.name = name
         self.capsules: List[Capsule] = []
         self.transitions: List[Transition] = []
+        self.last_record = None
 
     def add(self, capsule: Capsule) -> Capsule:
+        """Register a capsule (idempotent); returns it for chaining."""
         if capsule not in self.capsules:
             self.capsules.append(capsule)
         return capsule
 
     def connect(self, src: Capsule, dst: Capsule, kind: str = "simple",
                 sampling=None, condition=None) -> None:
+        """Add a transition from ``src`` to ``dst``.
+
+        Args:
+            src: upstream capsule (auto-registered).
+            dst: downstream capsule (auto-registered).
+            kind: "simple" (1->1), "exploration" (1->N via ``sampling``),
+                or "aggregation" (N->1, values stacked).
+            sampling: an explore.sampling.Sampling (exploration only).
+            condition: optional predicate Context -> bool; contexts failing
+                it do not flow through this transition.
+        """
         self.add(src)
         self.add(dst)
         self.transitions.append(Transition(src, dst, kind, sampling,
@@ -125,43 +171,42 @@ class Workflow:
 
     # ------------------------------------------------------------------ run
     def run(self, initial: Optional[Context] = None,
-            environment: Optional[Environment] = None
+            environment: Optional[Environment] = None, *,
+            scheduler: str = "async", cache=None,
+            provenance_path: Optional[str] = None,
+            max_workers: Optional[int] = None
             ) -> Dict[Capsule, List[Context]]:
+        """Execute the workflow and return per-capsule output contexts.
+
+        Args:
+            initial: seed values delivered to every root capsule.
+            environment: default execution environment (LocalEnvironment
+                when omitted); per-capsule ``.on(env)`` overrides win.
+            scheduler: "async" (default) fires capsules as soon as their
+                inputs arrive — independent branches run concurrently;
+                "serial" is the reference topological loop. Both produce
+                identical results for pure tasks.
+            cache: task memoization — None/False off, True for the
+                process-global cache, a directory path for a disk-backed
+                cache (restart-safe), or a TaskCache instance.
+            provenance_path: when given, the run's provenance record
+                (per-task wall time, retries, cache hit/miss, input
+                digests) is written there as JSON.
+            max_workers: async scheduler thread-pool width.
+
+        Returns:
+            Dict mapping each Capsule to the list of merged output
+            Contexts it produced (inputs unioned with task outputs).
+            The full provenance is available as ``self.last_record``.
+        """
+        from repro.core.scheduler import run_workflow
         env = environment or LocalEnvironment()
-        initial = Context(initial or {})
-        order = self._topo_order()
-        inbox: Dict[Capsule, List[Context]] = {c: [] for c in self.capsules}
-        for c in order:
-            if not any(t.dst is c for t in self.transitions):
-                inbox[c].append(initial)
-        results: Dict[Capsule, List[Context]] = {}
-        for c in order:
-            contexts = inbox[c]
-            cenv = c.environment or env
-            if len(contexts) > 1 and c.task.kind == "jax":
-                outs = cenv.map_explore(c.task, contexts)
-            else:
-                outs = [cenv.submit(c.task, ctx) for ctx in contexts]
-            merged = [ctx.merged(out) for ctx, out in zip(contexts, outs)]
-            for ctx in merged:
-                for h in c.hooks:
-                    h(ctx)
-            results[c] = merged
-            for t in self.transitions:
-                if t.src is not c:
-                    continue
-                flowing = [m for m in merged
-                           if t.condition is None or t.condition(m)]
-                if t.kind == "simple":
-                    inbox[t.dst].extend(flowing)
-                elif t.kind == "exploration":
-                    for m in flowing:
-                        for sample in t.sampling.contexts(m):
-                            inbox[t.dst].append(m.merged(sample))
-                elif t.kind == "aggregation":
-                    inbox[t.dst].append(_aggregate(flowing))
-                else:
-                    raise ValueError(t.kind)
+        results, record = run_workflow(
+            self, Context(initial or {}), env, scheduler=scheduler,
+            cache=cache, max_workers=max_workers)
+        self.last_record = record
+        if provenance_path:
+            record.save(provenance_path)
         return results
 
 

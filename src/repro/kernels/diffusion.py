@@ -21,6 +21,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax <= 0.4.x names it TPUCompilerParams; >= 0.5 CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+if _CompilerParams is None:
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; unsupported jax version")
+
 
 def _neighbor_counts(w):
     """(W, W) i32 number of in-bounds neighbours (8 interior, 5 edge, 3 corner)."""
@@ -97,7 +105,7 @@ def diffuse_evaporate(chem, rate, evap, *, block_n=8, interpret=False):
         ],
         out_specs=pl.BlockSpec((block_n, w, w), lambda i: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((n, w, w), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(chem, rate[:, None, None], evap[:, None, None], ncount)

@@ -18,6 +18,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax <= 0.4.x names it TPUCompilerParams; >= 0.5 CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+if _CompilerParams is None:
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; unsupported jax version")
+
 BIG = 3.0e38
 
 
@@ -62,7 +70,7 @@ def dominated_counts(objectives, *, block=512, interpret=False):
         out_specs=pl.BlockSpec((block, 1), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n, 1), jnp.int32),
         scratch_shapes=[pltpu.VMEM((block, 1), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(objectives, objectives)

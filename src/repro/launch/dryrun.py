@@ -35,6 +35,32 @@ _DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
                 "s16": 2, "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
 
 
+def cell_fingerprint(arch: str, shape_name: str, mesh_kind: str,
+                     roofline_variant: bool) -> str:
+    """Content address of one dry-run cell: the arch config, shape, mesh
+    and jax version. A cached record is only trusted when its fingerprint
+    matches — editing a config or upgrading jax invalidates the cell
+    instead of silently serving stale numbers (same content-addressing as
+    repro.core.cache task memoization)."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.cache import hash_value
+    return hash_value({
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "variant": "roofline" if roofline_variant else "production",
+        "config": repr(get_config(arch)), "jax": jax.__version__})
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` across jax revisions: older versions
+    return a one-element list of dicts, newer return the dict directly."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 def _result_bytes(line: str) -> int:
     """Sum byte sizes of the result shapes on an HLO op line."""
     lhs = line.split(" = ", 1)[0] if " = " in line else ""
@@ -126,7 +152,7 @@ def measure_cell(cfg, shape, mesh, *, roofline_variant: bool = False,
                               out_shardings=(None, cache_sh))
                 lowered = jfn.lower(params_sds, batch_sds, cache_sds)
             compiled = lowered.compile()
-        ca = compiled.cost_analysis() or {}
+        ca = cost_analysis_dict(compiled)
         ma = compiled.memory_analysis()
         return {
             "cost_analysis": {
@@ -205,7 +231,10 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_path: str,
     shape = get_shape(shape_name)
     record = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
               "mesh_shape": dict(mesh.shape),
-              "variant": "roofline" if roofline_variant else "production"}
+              "variant": "roofline" if roofline_variant else "production",
+              "cell_fingerprint": cell_fingerprint(arch, shape_name,
+                                                   mesh_kind,
+                                                   roofline_variant)}
     record.update(measure_cell(cfg, shape, mesh,
                                roofline_variant=roofline_variant,
                                shape_name=shape_name))
@@ -267,7 +296,7 @@ def run_ga_cell(mesh_kind: str, out_path: str, *, n_islands=2048, mu=32,
         compiled = lowered.compile()
         record["compile_s"] = round(time.time() - t1, 2)
 
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     ma = compiled.memory_analysis()
     record["cost_analysis"] = {"flops": float(ca.get("flops", -1)),
                                "bytes_accessed": float(ca.get("bytes accessed", -1))}
@@ -325,9 +354,12 @@ def main():
             path = os.path.join(args.out_dir, f"{prefix}{m}__{a}__{sn}.json")
             if os.path.exists(path) and not args.force:
                 with open(path) as f:
-                    if json.load(f).get("status") == "ok":
-                        print(f"[dryrun] cached {prefix}{m} {a} {sn}")
-                        continue
+                    rec = json.load(f)
+                if rec.get("status") == "ok" and \
+                        rec.get("cell_fingerprint") == cell_fingerprint(
+                            a, sn, m, args.roofline):
+                    print(f"[dryrun] cached {prefix}{m} {a} {sn}")
+                    continue
             cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", a,
                    "--shape", sn, "--mesh", m, "--out-dir", args.out_dir]
             if args.roofline:

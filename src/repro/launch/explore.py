@@ -20,6 +20,8 @@ from repro import checkpoint
 from repro.ants import simulate_batch
 from repro.configs.ants_netlogo import BOUNDS, CONFIG, REDUCED
 from repro.core import SavePopulationHook, Context
+from repro.core.cache import hash_value
+from repro.core.scheduler import RunRecord, TaskRecord, _utcnow
 from repro.evolution import (NSGA2Config, init_island_state, make_epoch,
                              pareto_front, run_islands)
 from repro.explore import replicated_batch
@@ -53,9 +55,35 @@ def calibrate(*, reduced: bool = True, n_islands: int = 8, mu: int = 16,
         start = checkpoint.restore(ckpt_dir, last, state_sds)
         printer(f"[explore] resumed at epoch {last}")
 
+    # run-record provenance (same schema the workflow scheduler emits):
+    # one TaskRecord per committed epoch, resumed epochs marked cache hits
+    record = RunRecord(workflow="ants-calibration", scheduler="islands",
+                       environment=f"mesh{dict(mesh.shape)}",
+                       started_at=_utcnow())
+    run_t0 = time.monotonic()
+    cfg_digest = hash_value({
+        "reduced": reduced, "n_islands": n_islands, "mu": mu, "lam": lam,
+        "steps_per_epoch": steps_per_epoch, "replicates": replicates,
+        "archive_size": archive_size, "merge_top_k": merge_top_k})
+    last_epoch_t = [run_t0]
+    if start is not None:
+        for e in range(1, int(last) + 1):
+            record.tasks.append(TaskRecord(
+                task="island_epoch", capsule=e,
+                environment=record.environment, inputs_digest=cfg_digest,
+                started_s=0.0, wall_s=0.0, retries=0, cache_hit=True,
+                mode="cache"))
+
     def on_epoch(state):
         e = int(state.epoch)
         checkpoint.save(ckpt_dir, e, state, blocking=True)
+        now = time.monotonic()
+        record.tasks.append(TaskRecord(
+            task="island_epoch", capsule=e, environment=record.environment,
+            inputs_digest=cfg_digest, started_s=last_epoch_t[0] - run_t0,
+            wall_s=now - last_epoch_t[0], retries=0, cache_hit=False,
+            mode="lanes"))
+        last_epoch_t[0] = now
         mask = np.asarray(pareto_front(state.archive))
         obj = np.asarray(state.archive.objectives)
         pop_hook(Context(generation=e,
@@ -87,6 +115,8 @@ def calibrate(*, reduced: bool = True, n_islands: int = 8, mu: int = 16,
     }
     with open(os.path.join(out_dir, "pareto_front.json"), "w") as f:
         json.dump(front, f, indent=2)
+    record.finalize(dt)
+    record.save(os.path.join(out_dir, "provenance.json"))
     return state, front
 
 

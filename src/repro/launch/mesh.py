@@ -9,19 +9,27 @@ from __future__ import annotations
 import jax
 
 
+def compat_make_mesh(shape, axes):
+    """``jax.make_mesh`` across API revisions: ``axis_types`` (and the
+    ``AxisType`` enum) only exist on newer jax; older versions default to
+    auto sharding semantics anyway, so omit the argument there."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Whatever devices exist, as a 1D 'data' mesh (tests/laptop)."""
     n = len(jax.devices())
-    return jax.make_mesh((n,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return compat_make_mesh((n,), ("data",))
 
 
 # TPU v5e hardware constants (roofline denominators)

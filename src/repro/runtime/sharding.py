@@ -47,6 +47,21 @@ _FSDP_CANDIDATES = [("pod", "data"), ("data",), ("pod",)]
 _FSDP_MIN_SIZE = 1 << 20    # params smaller than 1M elements stay replicated
 
 
+def abstract_mesh(sizes: Sequence[int], names: Sequence[str]):
+    """Build a ``jax.sharding.AbstractMesh`` across jax API revisions.
+
+    jax <= 0.4.35 took ``AbstractMesh(shape, names)``; 0.4.37 takes a single
+    ``((name, size), ...)`` tuple; >= 0.5 takes ``(shape, names)`` again with
+    keyword-only axis types. Centralising the construction here keeps tests
+    and resolver callers insulated from the churn.
+    """
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(zip(names, sizes)))
+    except TypeError:
+        return AbstractMesh(tuple(sizes), tuple(names))
+
+
 def _axes_fit(mesh: Mesh, cand: Tuple[str, ...], dim: int,
               used: set) -> bool:
     if any(a not in mesh.shape or a in used for a in cand):

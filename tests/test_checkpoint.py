@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.launch.mesh import compat_make_mesh
+
 from repro import checkpoint
 
 
@@ -71,8 +73,7 @@ def test_restore_with_shardings_resharding(tmp_path):
     t = {"w": jnp.arange(16.0).reshape(4, 4)}
     checkpoint.save(d, 1, t)
     n = len(jax.devices())
-    mesh = jax.make_mesh((n,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat_make_mesh((n,), ("data",))
     sh = {"w": jax.NamedSharding(mesh, jax.sharding.PartitionSpec("data"))}
     out = checkpoint.restore(d, 1, jax.eval_shape(lambda: t), shardings=sh)
     np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(t["w"]))

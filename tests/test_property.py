@@ -2,6 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="hypothesis not installed; property tests skipped")
 from hypothesis import given, settings, strategies as st
 
 from repro.evolution import nsga2
@@ -127,9 +131,8 @@ def test_diffusion_linearity(rate, evap, seed):
                       min_size=4, max_size=4),
        fsdp=st.booleans())
 def test_resolver_specs_always_legal(dims, names, fsdp):
-    from jax.sharding import AbstractMesh
-    from repro.runtime.sharding import logical_to_spec
-    mesh = AbstractMesh((2, 4, 4), ("pod", "data", "model"))
+    from repro.runtime.sharding import abstract_mesh, logical_to_spec
+    mesh = abstract_mesh((2, 4, 4), ("pod", "data", "model"))
     shape = tuple(dims)
     axes = tuple(names[:len(shape)])
     spec = logical_to_spec(axes, shape, mesh, fsdp=fsdp)

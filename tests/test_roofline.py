@@ -9,6 +9,9 @@ Also validates the HLO collective-bytes parser on a known program.
 import numpy as np
 import pytest
 
+from repro.launch.dryrun import cost_analysis_dict
+from repro.launch.mesh import compat_make_mesh
+
 import jax
 import jax.numpy as jnp
 
@@ -18,8 +21,7 @@ def mesh4():
     if len(jax.devices()) < 1:
         pytest.skip("no devices")
     n = len(jax.devices())
-    return jax.make_mesh((n,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return compat_make_mesh((n,), ("model",))
 
 
 def test_cost_analysis_counts_while_body_once():
@@ -37,8 +39,8 @@ def test_cost_analysis_counts_while_body_once():
                             unroll=8)
         return y.sum()
 
-    f_scan = jax.jit(scan_fn).lower(W, X).compile().cost_analysis()["flops"]
-    f_unroll = jax.jit(unroll_fn).lower(W, X).compile().cost_analysis()["flops"]
+    f_scan = cost_analysis_dict(jax.jit(scan_fn).lower(W, X).compile())["flops"]
+    f_unroll = cost_analysis_dict(jax.jit(unroll_fn).lower(W, X).compile())["flops"]
     assert f_scan < 2 * layer            # body counted once
     assert f_unroll > 7.5 * layer        # unrolled counts all 8
 
@@ -53,7 +55,7 @@ def test_cost_analysis_is_per_device(mesh4):
     sh_b = NamedSharding(mesh4, P("model", None))
     co = jax.jit(lambda a, b: a @ b,
                  in_shardings=(sh_a, sh_b)).lower(A, B).compile()
-    flops = co.cost_analysis()["flops"]
+    flops = cost_analysis_dict(co)["flops"]
     total = 2 * 256 * d * 128
     # per-device contraction shard: total / n (within fusion slop)
     assert flops < total / max(n, 1) * 1.5 + 1e5

@@ -1,0 +1,296 @@
+"""Async dataflow scheduler: concurrency, memoization, provenance, and
+serial-vs-async equivalence (including the Listing-3 replication pipeline)."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (Capsule, Context, JaxTask, PyTask, TaskCache, Val,
+                        Workflow, aggregate, explore, puzzle)
+from repro.core.cache import fingerprint_task, inputs_digest
+from repro.explore import (GridSampling, SeedSampling, StatisticTask, median,
+                           Replicate)
+
+x = Val("x", float)
+y = Val("y", float)
+z = Val("z", float)
+
+# module-level so task closures stay fingerprint-stable (globals are hashed
+# by name, not by value)
+CALLS = []
+
+
+def _diamond(barrier=None, delay=0.0, barrier_timeout=10.0):
+    """head -> (left, right) -> agg: the canonical fan-out/fan-in DAG.
+    The aggregate fires once per incoming context (dataflow semantics)."""
+    import time as _time
+
+    def branch(tag):
+        def fn(ctx):
+            if barrier is not None:
+                barrier.wait(timeout=barrier_timeout)
+            if delay:
+                _time.sleep(delay)
+            return {tag: ctx["x"] * (2.0 if tag == "y" else 3.0)}
+        return fn
+
+    head = Capsule(PyTask("head", lambda ctx: {}))
+    left = Capsule(PyTask("left", branch("y"), inputs=(x,), outputs=(y,)))
+    right = Capsule(PyTask("right", branch("z"), inputs=(x,), outputs=(z,)))
+    agg = Capsule(PyTask(
+        "agg", lambda ctx: {"w": float(ctx.get("y", 0.0) + ctx.get("z", 0.0))},
+        outputs=(Val("w", float),)))
+    wf = Workflow("diamond")
+    wf.connect(head, left)
+    wf.connect(head, right)
+    wf.connect(left, agg)
+    wf.connect(right, agg)
+    return wf, head, left, right, agg
+
+
+# ---------------------------------------------------------------------------
+# concurrency
+# ---------------------------------------------------------------------------
+def test_diamond_branches_run_concurrently():
+    # both branches block on a shared barrier: only concurrent execution
+    # can release it (the serial loop would deadlock -> BrokenBarrierError)
+    barrier = threading.Barrier(2)
+    wf, head, left, right, agg = _diamond(barrier=barrier)
+    res = wf.run({"x": 1.0}, scheduler="async")
+    assert res[left][0]["y"] == 2.0
+    assert res[right][0]["z"] == 3.0
+    assert not barrier.broken
+
+
+def test_serial_scheduler_does_not_overlap_branches():
+    from repro.core import LocalEnvironment
+    barrier = threading.Barrier(2)
+    wf, head, left, right, agg = _diamond(barrier=barrier,
+                                          barrier_timeout=1.0)
+    with pytest.raises(RuntimeError):      # barrier times out -> task fails
+        wf.run({"x": 1.0},
+               LocalEnvironment(retries=0, backoff_s=0.0),
+               scheduler="serial")
+    assert barrier.broken
+
+
+def test_provenance_shows_branch_overlap():
+    wf, head, left, right, agg = _diamond(delay=0.15)
+    wf.run({"x": 1.0}, scheduler="async")
+    recs = {r.task: r for r in wf.last_record.tasks}
+    l, r = recs["left"], recs["right"]
+    # wall-clock intervals of the two branch firings overlap
+    assert l.started_s < r.started_s + r.wall_s
+    assert r.started_s < l.started_s + l.wall_s
+
+
+# ---------------------------------------------------------------------------
+# serial vs async equivalence
+# ---------------------------------------------------------------------------
+def _assert_results_equal(res_a, res_b):
+    assert set(map(id, res_a)) == set(map(id, res_b))
+    for cap, ctxs_a in res_a.items():
+        ctxs_b = res_b[cap]
+        assert len(ctxs_a) == len(ctxs_b)
+        for ca, cb in zip(ctxs_a, ctxs_b):
+            assert set(ca) == set(cb)
+            for k in ca:
+                np.testing.assert_array_equal(np.asarray(ca[k]),
+                                              np.asarray(cb[k]))
+
+
+def test_diamond_serial_async_equivalence():
+    wf, *_ = _diamond()
+    res_serial = wf.run({"x": 2.0}, scheduler="serial")
+    res_async = wf.run({"x": 2.0}, scheduler="async")
+    _assert_results_equal(res_serial, res_async)
+
+
+def test_listing3_replication_pipeline_equivalence():
+    """Paper Listing 3: Replicate(model, seed x 10, median) — identical
+    contexts, in identical order, under both schedulers."""
+    seed = Val("seed", int)
+    food1 = Val("food1", float)
+    med1 = Val("medNumberFood1", float)
+
+    def model_fn(ctx):
+        rng = np.random.RandomState(int(ctx["seed"]) % (2 ** 31))
+        return {"food1": float(rng.uniform(0.0, 100.0))}
+
+    def build():
+        model_c = Capsule(PyTask("ants", model_fn, inputs=(seed,),
+                                 outputs=(food1,)))
+        stat_c = Capsule(StatisticTask("stat", [(food1, med1, median)]))
+        return Replicate(model_c, SeedSampling(seed, 10, seed=42),
+                         stat_c), model_c, stat_c
+
+    p1, m1, s1 = build()
+    p2, m2, s2 = build()
+    res_serial = p1.run(scheduler="serial")
+    res_async = p2.run(scheduler="async")
+    assert len(res_serial[m1]) == len(res_async[m2]) == 10
+    for a, b in zip(res_serial[m1], res_async[m2]):
+        assert a["seed"] == b["seed"] and a["food1"] == b["food1"]
+    assert res_serial[s1][0]["medNumberFood1"] == \
+        res_async[s2][0]["medNumberFood1"]
+
+
+def test_jax_fanout_lanes_equivalence():
+    sq = JaxTask("sq", lambda x: {"y": x * x}, inputs=(x,), outputs=(y,))
+    samp = GridSampling({x: [1.0, 2.0, 3.0, 4.0]})
+
+    def build():
+        head = Capsule(PyTask("head", lambda ctx: {}))
+        sq_c = Capsule(sq)
+        med_c = Capsule(StatisticTask("med", [(y, z, median)]))
+        return (puzzle(head) >> explore(samp) >> sq_c
+                >> aggregate() >> med_c), sq_c, med_c
+
+    pa, sqa, meda = build()
+    pb, sqb, medb = build()
+    res_serial = pa.run(scheduler="serial")
+    res_async = pb.run(scheduler="async")
+    assert [float(c["y"]) for c in res_serial[sqa]] == \
+        [float(c["y"]) for c in res_async[sqb]] == [1.0, 4.0, 9.0, 16.0]
+    assert float(res_serial[meda][0]["z"]) == float(res_async[medb][0]["z"])
+    # the fan-out went through batched lanes, not per-point submits
+    modes = {r.mode for r in pb.workflow.last_record.tasks
+             if r.task == "sq"}
+    assert modes == {"lanes"}
+
+
+# ---------------------------------------------------------------------------
+# memoization
+# ---------------------------------------------------------------------------
+def test_cache_hits_on_second_identical_run():
+    wf, head, left, right, agg = _diamond()
+    cache = TaskCache()
+    res1 = wf.run({"x": 5.0}, cache=cache)
+    assert wf.last_record.cache_hits == 0
+    res2 = wf.run({"x": 5.0}, cache=cache)
+    assert wf.last_record.cache_hits > 0
+    assert wf.last_record.cache_misses == 0        # every firing memoized
+    _assert_results_equal(res1, res2)
+    # and the cached run matches the serial reference bit-for-bit
+    res_serial = wf.run({"x": 5.0}, scheduler="serial")
+    _assert_results_equal(res2, res_serial)
+
+
+def test_cache_distinguishes_inputs():
+    wf, *_ = _diamond()
+    cache = TaskCache()
+    wf.run({"x": 1.0}, cache=cache)
+    wf.run({"x": 2.0}, cache=cache)                # different content
+    assert wf.last_record.cache_hits == 0
+
+
+def test_disk_cache_survives_restart(tmp_path):
+    CALLS.clear()
+
+    def expensive(ctx):
+        CALLS.append(ctx["x"])
+        return {"y": ctx["x"] + 1.0}
+
+    def build():
+        a = Capsule(PyTask("exp", expensive, inputs=(x,), outputs=(y,)))
+        return Workflow("restart"), a
+
+    wf1, a1 = build()
+    wf1.add(a1)
+    wf1.run({"x": 7.0}, cache=str(tmp_path))
+    assert CALLS == [7.0]
+    # "restart": fresh workflow, fresh capsule, fresh cache object — only
+    # the directory survives; the firing is served from disk
+    wf2, a2 = build()
+    wf2.add(a2)
+    res = wf2.run({"x": 7.0}, cache=str(tmp_path))
+    assert CALLS == [7.0]                          # not recomputed
+    assert res[a2][0]["y"] == 8.0
+    assert wf2.last_record.cache_hits == 1
+
+
+def test_seed_sampling_defeats_false_cache_sharing():
+    # replicates with distinct seeds must NOT collapse to one cache entry
+    seed = Val("seed", int)
+    t = PyTask("m", lambda ctx: {"y": float(ctx["seed"] % 97)},
+               inputs=(seed,), outputs=(y,))
+    digs = {inputs_digest(t, Context(seed=s)) for s in range(20)}
+    assert len(digs) == 20
+
+
+def test_fingerprint_tracks_code_and_defaults():
+    t1 = PyTask("f", lambda ctx: {"y": ctx["x"] + 1}, inputs=(x,),
+                outputs=(y,))
+    t2 = PyTask("f", lambda ctx: {"y": ctx["x"] + 2}, inputs=(x,),
+                outputs=(y,))
+    assert fingerprint_task(t1) != fingerprint_task(t2)
+    assert fingerprint_task(t1) != fingerprint_task(t1.set(x=3.0))
+    t3 = PyTask("f", lambda ctx: {"y": ctx["x"] + 1}, inputs=(x,),
+                outputs=(y,))
+    assert fingerprint_task(t1) == fingerprint_task(t3)
+
+
+# ---------------------------------------------------------------------------
+# provenance record
+# ---------------------------------------------------------------------------
+def test_provenance_record_schema(tmp_path):
+    import json
+    wf, head, left, right, agg = _diamond()
+    path = str(tmp_path / "run.json")
+    wf.run({"x": 1.0}, cache=TaskCache(), provenance_path=path)
+    rec = json.load(open(path))
+    assert rec["schema"] == "repro-run-record/v1"
+    assert rec["workflow"] == "diamond"
+    assert rec["scheduler"] == "async"
+    assert rec["environment"] == "local"
+    assert rec["makespan_s"] >= 0
+    assert rec["cache"] == {"hits": 0, "misses": 5}
+    assert len(rec["tasks"]) == 5    # head, left, right, agg x2 contexts
+    for t in rec["tasks"]:
+        for field in ("task", "capsule", "environment", "inputs_digest",
+                      "started_s", "wall_s", "retries", "cache_hit", "mode",
+                      "cache_key"):
+            assert field in t, field
+        assert len(t["inputs_digest"]) == 64       # sha256 hex
+        assert t["retries"] == 0 and t["cache_hit"] is False
+    assert {t["task"] for t in rec["tasks"]} == \
+        {"head", "left", "right", "agg"}
+
+
+def test_provenance_counts_retries():
+    CALLS.clear()
+
+    def flaky(ctx):
+        CALLS.append(1)
+        if len(CALLS) < 3:
+            raise IOError("transient")
+        return {"y": 1.0}
+
+    from repro.core import LocalEnvironment
+    wf = Workflow("flaky")
+    c = wf.add(Capsule(PyTask("flaky", flaky, outputs=(y,))))
+    wf.run(environment=LocalEnvironment(retries=3, backoff_s=0.0))
+    (rec,) = wf.last_record.tasks
+    assert rec.retries == 2 and rec.task == "flaky"
+
+
+# ---------------------------------------------------------------------------
+# error handling
+# ---------------------------------------------------------------------------
+def test_async_propagates_task_errors():
+    from repro.core import LocalEnvironment
+    wf = Workflow("boom")
+    bad = wf.add(Capsule(PyTask("bad", lambda ctx: 1 / 0, outputs=(y,))))
+    with pytest.raises(RuntimeError, match="failed after"):
+        wf.run(environment=LocalEnvironment(retries=0, backoff_s=0.0),
+               scheduler="async")
+
+
+def test_async_cycle_detection():
+    wf = Workflow()
+    t = PyTask("a", lambda ctx: {})
+    c1, c2 = Capsule(t), Capsule(t)
+    wf.connect(c1, c2)
+    wf.connect(c2, c1)
+    with pytest.raises(ValueError, match="cycle"):
+        wf.run(scheduler="async")

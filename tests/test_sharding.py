@@ -4,16 +4,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+from repro.launch.mesh import compat_make_mesh
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.runtime.sharding import (logical_to_spec, tree_shardings,
-                                    use_mesh, constrain)
+from repro.runtime.sharding import (abstract_mesh, logical_to_spec,
+                                    tree_shardings, use_mesh, constrain)
 
-
-from jax.sharding import AbstractMesh
-
-MESH = AbstractMesh((4, 4), ("data", "model"))
-POD = AbstractMesh((2, 4, 4), ("pod", "data", "model"))
+MESH = abstract_mesh((4, 4), ("data", "model"))
+POD = abstract_mesh((2, 4, 4), ("pod", "data", "model"))
 
 
 def test_heads_shard_when_divisible():
@@ -90,8 +89,7 @@ def test_constrain_noop_without_mesh():
 def test_real_sharded_matmul_on_host_mesh():
     """End-to-end: resolver specs drive a real pjit computation."""
     n = len(jax.devices())
-    mesh = jax.make_mesh((n,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat_make_mesh((n,), ("model",))
     w_spec = logical_to_spec(("embed", "mlp"), (16, 32), mesh)
     x = jnp.arange(8 * 16, dtype=jnp.float32).reshape(8, 16)
     w = jnp.ones((16, 32), jnp.float32)
