@@ -1,14 +1,22 @@
 """Benchmark harness — one benchmark per paper claim/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows. Each benchmark measures the
-steady state (post-compile) on this host; the paper-scale projections next to
-them come from the roofline artifacts (benchmarks/roofline.py).
+Prints ``name,us_per_call,derived`` CSV rows and (with ``--json``) writes a
+machine-readable ``BENCH_results.json`` so the perf trajectory is tracked
+across PRs (name -> us_per_call + derived metrics, plus backend and git sha).
+Each benchmark measures the steady state (post-compile) on this host; the
+paper-scale projections next to them come from the roofline artifacts
+(benchmarks/roofline.py).
+
+    python benchmarks/run.py                        # full shapes, CSV only
+    python benchmarks/run.py --json BENCH_results.json
+    python benchmarks/run.py --reduced --only nsga2 # CI smoke shapes
 
 Paper claims covered:
   ants_tick             the simulation workload itself (Fig 1/2 model)
   ants_eval_throughput  §4.6: "200,000 individuals evaluated in one hour"
   island_epoch          §4.6 island model end-to-end epoch
-  nsga2_dominance       §4.5 NSGA-II non-dominated sorting hot spot
+  nsga2_dominance       §4.5 non-dominated sorting: the fused single-pass
+                        selection engine vs the per-front peeling baseline
   nsga2_generation      §4.5 Listing 4 one generational step
   workflow_submit       §2 engine overhead per delegated task
   replication_median    §4.4 Listing 3 replication + median
@@ -16,7 +24,10 @@ Paper claims covered:
 """
 from __future__ import annotations
 
+import argparse
+import json
 import os
+import subprocess
 import sys
 import time
 
@@ -25,6 +36,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+RESULTS: dict = {}
 
 
 def timeit(fn, *, warmup=2, iters=5):
@@ -38,12 +51,13 @@ def timeit(fn, *, warmup=2, iters=5):
 
 def row(name, us, derived):
     print(f"{name},{us:.1f},{derived}")
+    RESULTS[name] = {"us_per_call": round(float(us), 1), "derived": derived}
 
 
-def bench_ants_tick():
+def bench_ants_tick(reduced=False):
     from repro.ants import init_state, make_step
     from repro.configs.ants_netlogo import REDUCED
-    n = 64
+    n = 8 if reduced else 64
     keys = jax.random.split(jax.random.key(0), n)
     state = init_state(REDUCED, keys)
     step = jax.jit(make_step(REDUCED))
@@ -56,14 +70,14 @@ def bench_ants_tick():
         jax.block_until_ready(state.chem)
 
     us = timeit(one)
-    row("ants_tick_64lanes", us, f"{n / (us / 1e6):.0f}_lane_ticks_per_s")
+    row(f"ants_tick_{n}lanes", us, f"{n / (us / 1e6):.0f}_lane_ticks_per_s")
 
 
-def bench_ants_eval_throughput():
+def bench_ants_eval_throughput(reduced=False):
     """The paper's 200k evals/hour claim, measured on this host."""
     from repro.ants import simulate_batch
     from repro.configs.ants_netlogo import REDUCED
-    n = 32
+    n = 4 if reduced else 32
     keys = jax.random.split(jax.random.key(0), n)
     d = jax.random.uniform(jax.random.key(1), (n,)) * 99
     e = jax.random.uniform(jax.random.key(2), (n,)) * 99
@@ -77,16 +91,17 @@ def bench_ants_eval_throughput():
         f"{per_hour:.0f}_evals_per_hour_single_CPU_core")
 
 
-def bench_island_epoch():
+def bench_island_epoch(reduced=False):
     from repro.ants import simulate_batch
     from repro.configs.ants_netlogo import BOUNDS, REDUCED
     from repro.evolution import NSGA2Config, init_island_state, make_epoch
     from repro.explore import replicated_batch
+    n_islands, reps = (2, 2) if reduced else (4, 3)
     cfg = NSGA2Config(mu=8, genome_dim=2, bounds=BOUNDS, n_objectives=3)
     eval_fn = replicated_batch(
-        lambda k, g: simulate_batch(REDUCED, k, g[:, 0], g[:, 1]), 3)
+        lambda k, g: simulate_batch(REDUCED, k, g[:, 0], g[:, 1]), reps)
     epoch = jax.jit(make_epoch(cfg, eval_fn, lam=8, steps_per_epoch=1))
-    state = init_island_state(cfg, jax.random.key(0), n_islands=4,
+    state = init_island_state(cfg, jax.random.key(0), n_islands=n_islands,
                               archive_size=64)
 
     def one():
@@ -95,28 +110,44 @@ def bench_island_epoch():
         jax.block_until_ready(state.archive.objectives)
 
     us = timeit(one, warmup=1, iters=3)
-    evals = 4 * 8 * 3   # islands x lam x replicates per epoch (steady state)
-    row("island_epoch_4islands", us, f"{evals / (us / 1e6):.0f}_sim_runs_per_s")
+    evals = n_islands * 8 * reps   # islands x lam x replicates (steady state)
+    row(f"island_epoch_{n_islands}islands", us,
+        f"{evals / (us / 1e6):.0f}_sim_runs_per_s")
 
 
-def bench_nsga2_dominance():
-    from repro.kernels import ref
-    n, m = 4096, 3
+def bench_nsga2_dominance(reduced=False):
+    """§4.5 sorting hot spot at archive scale: the fused single-pass engine
+    (one O(N^2) sweep + popcount peeling) vs the pre-engine peeling baseline
+    (one full pairwise pass per front, jitted lax.while_loop) — both jitted
+    and warmed, apples to apples."""
+    from repro.evolution import nsga2
+    n, m = (512, 3) if reduced else (8192, 3)
+    iters = 1 if n >= 4096 else 3
     f = jax.random.uniform(jax.random.key(0), (n, m), jnp.float32)
-    fn = jax.jit(ref.dominated_counts_ref)
+    fused = jax.jit(nsga2.nondominated_ranks)
+    peel = jax.jit(nsga2.nondominated_ranks_peel_while)
 
-    def one():
-        fn(f).block_until_ready()
+    us_fused = timeit(lambda: jax.block_until_ready(fused(f)),
+                      warmup=1, iters=iters)
+    us_peel = timeit(lambda: jax.block_until_ready(peel(f)),
+                     warmup=1, iters=iters)
+    ranks = np.asarray(fused(f))
+    np.testing.assert_array_equal(ranks, np.asarray(peel(f)))
+    passes = int(ranks[ranks < n].max()) + 1   # peel ran one pass per front
 
-    us = timeit(one)
-    row("nsga2_dominance_4096", us,
-        f"{n * n / (us / 1e6) / 1e9:.2f}_Gpairs_per_s")
+    pairs_per_s = n * n / (us_fused / 1e6) / 1e9
+    row(f"nsga2_dominance_{n}", us_fused,
+        f"{us_peel / us_fused:.1f}x_vs_peeling_baseline_"
+        f"{pairs_per_s:.2f}_Gpairs_per_s")
+    row(f"nsga2_dominance_{n}_peel_baseline", us_peel,
+        f"{passes}_pairwise_passes")
 
 
-def bench_nsga2_generation():
+def bench_nsga2_generation(reduced=False):
     from repro.evolution import NSGA2Config
     from repro.evolution.ga import evaluate_initial, init_state, make_step
-    cfg = NSGA2Config(mu=64, genome_dim=4, bounds=((0., 1.),) * 4,
+    mu = 16 if reduced else 64
+    cfg = NSGA2Config(mu=mu, genome_dim=4, bounds=((0., 1.),) * 4,
                       n_objectives=3)
 
     def zdt(keys, genomes):
@@ -124,7 +155,7 @@ def bench_nsga2_generation():
         return jnp.stack([f1, 1 - f1, (genomes ** 2).sum(1)], 1)
 
     state = evaluate_initial(cfg, init_state(cfg, jax.random.key(0)), zdt)
-    step = jax.jit(make_step(cfg, zdt, lam=64))
+    step = jax.jit(make_step(cfg, zdt, lam=mu))
 
     def one():
         nonlocal state
@@ -132,10 +163,11 @@ def bench_nsga2_generation():
         jax.block_until_ready(state.objectives)
 
     us = timeit(one)
-    row("nsga2_generation_mu64", us, f"{64 / (us / 1e6):.0f}_offspring_per_s")
+    row(f"nsga2_generation_mu{mu}", us,
+        f"{mu / (us / 1e6):.0f}_offspring_per_s")
 
 
-def bench_workflow_submit():
+def bench_workflow_submit(reduced=False):
     from repro.core import Context, LocalEnvironment, PyTask, Val
     env = LocalEnvironment()
     t = PyTask("noop", lambda ctx: {"y": ctx["x"]}, inputs=(Val("x"),),
@@ -149,12 +181,13 @@ def bench_workflow_submit():
     row("workflow_submit", us, f"{1e6 / us:.0f}_tasks_per_s")
 
 
-def bench_replication_median():
+def bench_replication_median(reduced=False):
     from repro.ants import simulate_batch
     from repro.configs.ants_netlogo import REDUCED
     from repro.explore import replicated_batch
+    reps = 2 if reduced else 5
     eval_fn = replicated_batch(
-        lambda k, g: simulate_batch(REDUCED, k, g[:, 0], g[:, 1]), 5)
+        lambda k, g: simulate_batch(REDUCED, k, g[:, 0], g[:, 1]), reps)
     keys = jax.random.split(jax.random.key(0), 4)
     genomes = jax.random.uniform(jax.random.key(1), (4, 2)) * 99
     jfn = jax.jit(eval_fn)
@@ -163,10 +196,11 @@ def bench_replication_median():
         jfn(keys, genomes).block_until_ready()
 
     us = timeit(one, warmup=1, iters=3)
-    row("replication_median_5x", us, f"{20 / (us / 1e6):.0f}_sim_runs_per_s")
+    row(f"replication_median_{reps}x", us,
+        f"{4 * reps / (us / 1e6):.0f}_sim_runs_per_s")
 
 
-def bench_lm_train_step():
+def bench_lm_train_step(reduced=False):
     import dataclasses
     from repro.configs import get_config
     from repro.models import build
@@ -176,7 +210,7 @@ def bench_lm_train_step():
     model = build(cfg)
     state, _ = init_train_state(model, jax.random.key(0))
     step = jax.jit(make_train_step(model, OptimizerConfig(), 1))
-    b, s = 4, 128
+    b, s = (2, 32) if reduced else (4, 128)
     batch = {"tokens": jax.random.randint(jax.random.key(1), (b, s + 1), 0,
                                           cfg.vocab_size)}
 
@@ -190,16 +224,59 @@ def bench_lm_train_step():
         f"{b * s / (us / 1e6):.0f}_tokens_per_s_single_CPU_core")
 
 
-def main() -> None:
+BENCHES = [
+    bench_ants_tick,
+    bench_ants_eval_throughput,
+    bench_island_epoch,
+    bench_nsga2_dominance,
+    bench_nsga2_generation,
+    bench_workflow_submit,
+    bench_replication_median,
+    bench_lm_train_step,
+]
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            timeout=10).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--reduced", action="store_true",
+                    help="CI smoke shapes (small N, CPU interpret friendly)")
+    ap.add_argument("--only", default="",
+                    help="substring filter on benchmark function names")
+    ap.add_argument("--json", default="",
+                    help="also write machine-readable results to this path")
+    args = ap.parse_args(argv)
+
     print("name,us_per_call,derived")
-    bench_ants_tick()
-    bench_ants_eval_throughput()
-    bench_island_epoch()
-    bench_nsga2_dominance()
-    bench_nsga2_generation()
-    bench_workflow_submit()
-    bench_replication_median()
-    bench_lm_train_step()
+    for bench in BENCHES:
+        if args.only and args.only not in bench.__name__:
+            continue
+        bench(reduced=args.reduced)
+
+    if args.json:
+        payload = {
+            "schema": "repro-bench/v1",
+            "backend": jax.default_backend(),
+            "device_count": len(jax.devices()),
+            "git_sha": _git_sha(),
+            "reduced": bool(args.reduced),
+            "created": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "benchmarks": RESULTS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"[bench] wrote {args.json} ({len(RESULTS)} entries)",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
 from repro.evolution.nsga2 import NSGA2Config  # noqa
 from repro.evolution.ga import GAState, init_state, make_step, run_generational  # noqa
 from repro.evolution.island import (IslandState, init_island_state,  # noqa
-                                    make_epoch, run_islands)
+                                    make_epoch, make_evolve, make_merge,
+                                    make_reseed, run_islands)
 from repro.evolution.archive import Archive, init_archive, merge, pareto_front  # noqa

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.evolution import nsga2
+from repro.runtime.sharding import sharded_dominance_pass
 
 
 class Archive(NamedTuple):
@@ -26,7 +27,11 @@ def init_archive(size, genome_dim, n_objectives):
 
 
 def merge(archive: Archive, genomes, objectives, valid=None) -> Archive:
-    """Truncate (archive + incoming) to archive size by (rank, -crowding)."""
+    """Truncate (archive + incoming) to archive size by (rank, -crowding).
+
+    The pool-wide non-dominated sort is the archive-scale O(pool^2) hot spot;
+    it runs through the mesh-sharded single-pass sweep (which falls back to
+    the local fused kernel when no mesh is active)."""
     a = archive.genomes.shape[0]
     if valid is None:
         valid = jnp.ones((genomes.shape[0],), bool)
@@ -34,11 +39,10 @@ def merge(archive: Archive, genomes, objectives, valid=None) -> Archive:
     pool_o = jnp.concatenate([archive.objectives,
                               objectives.astype(jnp.float32)])
     pool_v = jnp.concatenate([archive.valid, valid])
-    ranks = nsga2.nondominated_ranks(pool_o, pool_v)
+    ranks = nsga2.nondominated_ranks(pool_o, pool_v,
+                                     pass_fn=sharded_dominance_pass)
     crowd = nsga2.crowding_distance(pool_o, ranks)
-    ranks = jnp.where(pool_v, ranks, jnp.int32(10 ** 9))
-    key_val = ranks.astype(jnp.float32) * 1e6 - jnp.clip(
-        jnp.nan_to_num(crowd, posinf=1e5), 0, 1e5)
+    key_val = nsga2.truncation_key(ranks, crowd, pool_v)
     order = jnp.argsort(key_val)[:a]
     return Archive(pool_g[order], pool_o[order], pool_v[order])
 

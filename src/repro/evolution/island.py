@@ -9,11 +9,21 @@ sharded over the data (and pod) mesh axes. One *epoch* =
     all-islands merge into the archive  -- the only collective (gather+sort)
     reseed islands from the archive     -- broadcast
 
-EGI's asynchronous merges become bulk-synchronous epochs; K controls the
-sync/async trade-off. Stragglers cannot exist inside an epoch (fixed step
-count, SPMD); node loss is handled by checkpointing (archive + island states)
-at every epoch boundary — losing an epoch loses only K steps of those
-islands' work, the paper's own failure semantics.
+The three stages are built separately (`make_evolve` / `make_merge` /
+`make_reseed`) so the driver can either compose them bulk-synchronously
+(`make_epoch`, bit-identical to the fused epoch) or software-pipeline them
+(`run_islands(pipeline=True)`): the evaluation-heavy evolve of epoch k+1 is
+dispatched right after the selection-heavy merge of epoch k, so
+`simulate_batch` overlaps the archive's O(pool^2) dominance sort — the
+double-buffered schedule. In pipelined mode the reseed draws from the archive
+as of epoch k-1 (one epoch stale), which is exactly EGI's asynchronous-merge
+semantics: islands never wait for the global archive to catch up.
+
+EGI's asynchronous merges become (pipelined) bulk-synchronous epochs; K
+controls the sync/async trade-off. Stragglers cannot exist inside an epoch
+(fixed step count, SPMD); node loss is handled by checkpointing (archive +
+island states) at every epoch boundary — losing an epoch loses only K steps
+of those islands' work, the paper's own failure semantics.
 """
 from __future__ import annotations
 
@@ -57,17 +67,13 @@ def init_island_state(cfg: NSGA2Config, key, *, n_islands: int,
     )
 
 
-def make_epoch(cfg: NSGA2Config, eval_fn: Callable, *, lam: int,
-               steps_per_epoch: int, reseed_frac: float = 0.5,
-               merge_top_k: int = 0) -> Callable:
-    """Returns jit-able epoch(state) -> state.
-
-    merge_top_k > 0: each island contributes only its best k individuals
-    (by rank, then crowding) to the archive merge instead of its whole
-    population — the merge's O(pool^2) dominance pass shrinks by
-    (mu/k)^2 while preserving every island-local Pareto point for k >= the
-    island front size (§Perf hillclimb; the paper's islands likewise merge
-    *finished populations*, so this is a strict refinement)."""
+# ---------------------------------------------------------------------------
+# Epoch stages
+# ---------------------------------------------------------------------------
+def make_evolve(cfg: NSGA2Config, eval_fn: Callable, *, lam: int,
+                steps_per_epoch: int) -> Callable:
+    """islands -> islands after K island-local NSGA-II steps (the
+    evaluation-heavy stage; zero cross-island communication)."""
     step = ga.make_step(cfg, eval_fn, lam)
 
     def evolve_island(istate: ga.GAState) -> ga.GAState:
@@ -84,25 +90,45 @@ def make_epoch(cfg: NSGA2Config, eval_fn: Callable, *, lam: int,
         istate, _ = jax.lax.scan(body, istate, None, length=steps_per_epoch)
         return istate
 
-    def epoch(state: IslandState) -> IslandState:
-        islands = _constrain_islands(state.islands)
-        islands = jax.vmap(evolve_island)(islands)
+    def evolve(islands: ga.GAState) -> ga.GAState:
         islands = _constrain_islands(islands)
+        islands = jax.vmap(evolve_island)(islands)
+        return _constrain_islands(islands)
 
-        # ---- merge: the only cross-island communication ----
+    return evolve
+
+
+def make_merge(cfg: NSGA2Config, *, merge_top_k: int = 0) -> Callable:
+    """(archive, islands) -> archive — the selection-heavy stage and the only
+    cross-island communication.
+
+    merge_top_k > 0: each island contributes only its best k individuals
+    (by rank, then crowding) to the archive merge instead of its whole
+    population — the merge's O(pool^2) dominance pass shrinks by
+    (mu/k)^2 while preserving every island-local Pareto point for k >= the
+    island front size (§Perf hillclimb; the paper's islands likewise merge
+    *finished populations*, so this is a strict refinement). The per-island
+    rank/crowding runs donor-batched: all islands' populations flatten into
+    ONE grouped single-pass dominance launch instead of a vmapped launch per
+    island pool."""
+
+    def merge_islands(archive: Archive, islands: ga.GAState) -> Archive:
         n_i, mu = islands.genomes.shape[:2]
         if merge_top_k and merge_top_k < mu:
-            def island_best(g, o, v):
-                ranks = nsga2.nondominated_ranks(o, v)
-                crowd = nsga2.crowding_distance(o, ranks)
-                ranks = jnp.where(v, ranks, jnp.int32(10 ** 9))
-                key_val = ranks.astype(jnp.float32) * 1e6 - jnp.clip(
-                    jnp.nan_to_num(crowd, posinf=1e5), 0, 1e5)
-                idx = jnp.argsort(key_val)[:merge_top_k]
-                return g[idx], o[idx], v[idx]
-
-            sel_g, sel_o, sel_v = jax.vmap(island_best)(
-                islands.genomes, islands.objectives, islands.valid)
+            flat_o = islands.objectives.reshape(n_i * mu, -1)
+            flat_v = islands.valid.reshape(n_i * mu)
+            groups = jnp.repeat(jnp.arange(n_i, dtype=jnp.int32), mu)
+            ranks = nsga2.nondominated_ranks(flat_o, flat_v, groups=groups)
+            crowd = nsga2.crowding_distance(flat_o, ranks, groups=groups,
+                                            n_groups=n_i)
+            key_val = nsga2.truncation_key(ranks, crowd, flat_v)
+            idx = jnp.argsort(key_val.reshape(n_i, mu),
+                              axis=1)[:, :merge_top_k]
+            sel_g = jnp.take_along_axis(islands.genomes, idx[..., None],
+                                        axis=1)
+            sel_o = jnp.take_along_axis(islands.objectives, idx[..., None],
+                                        axis=1)
+            sel_v = jnp.take_along_axis(islands.valid, idx, axis=1)
             flat_g = sel_g.reshape(n_i * merge_top_k, -1)
             flat_o = sel_o.reshape(n_i * merge_top_k, -1)
             flat_v = sel_v.reshape(n_i * merge_top_k)
@@ -110,11 +136,18 @@ def make_epoch(cfg: NSGA2Config, eval_fn: Callable, *, lam: int,
             flat_g = islands.genomes.reshape(n_i * mu, -1)
             flat_o = islands.objectives.reshape(n_i * mu, -1)
             flat_v = islands.valid.reshape(n_i * mu)
-        archive = merge(state.archive, flat_g, flat_o, flat_v)
+        return merge(archive, flat_g, flat_o, flat_v)
 
-        # ---- reseed: replace a fraction of each island's population with
-        # archive samples (the paper: "each island gets 50 individuals
-        # sampled from the global population") ----
+    return merge_islands
+
+
+def make_reseed(cfg: NSGA2Config, *, reseed_frac: float = 0.5) -> Callable:
+    """(islands, archive) -> islands with a fraction of each population
+    replaced by archive samples (the paper: "each island gets 50 individuals
+    sampled from the global population")."""
+
+    def reseed_islands(islands: ga.GAState, archive: Archive) -> ga.GAState:
+        mu = islands.genomes.shape[1]
         k_all = jax.vmap(jax.random.split)(islands.rng)
         rngs, k_seed = k_all[:, 0], k_all[:, 1]
 
@@ -123,7 +156,7 @@ def make_epoch(cfg: NSGA2Config, eval_fn: Callable, *, lam: int,
             n_replace = max(int(mu * reseed_frac), 1)
             pick = jax.random.randint(k, (n_replace,), 0, a)
             ok = archive.valid[pick]
-            slots = jnp.arange(n_replace)      # replace worst-ranked tail?
+            slots = jnp.arange(n_replace)
             # replace the last n_replace slots (population is unordered
             # post-selection; slots are arbitrary but fixed-shape)
             g = istate_g.at[mu - 1 - slots].set(
@@ -140,7 +173,26 @@ def make_epoch(cfg: NSGA2Config, eval_fn: Callable, *, lam: int,
                                    islands.valid, k_seed)
         islands = islands._replace(genomes=g, objectives=o, valid=v,
                                    rng=rngs)
-        islands = _constrain_islands(islands)
+        return _constrain_islands(islands)
+
+    return reseed_islands
+
+
+def make_epoch(cfg: NSGA2Config, eval_fn: Callable, *, lam: int,
+               steps_per_epoch: int, reseed_frac: float = 0.5,
+               merge_top_k: int = 0) -> Callable:
+    """Returns jit-able epoch(state) -> state (the bulk-synchronous
+    composition evolve -> merge -> reseed)."""
+    evolve = make_evolve(cfg, eval_fn, lam=lam,
+                         steps_per_epoch=steps_per_epoch)
+    merge_islands = make_merge(cfg, merge_top_k=merge_top_k)
+    reseed_islands = make_reseed(cfg, reseed_frac=reseed_frac)
+
+    def epoch(state: IslandState) -> IslandState:
+        islands = evolve(state.islands)
+        n_i = islands.genomes.shape[0]
+        archive = merge_islands(state.archive, islands)
+        islands = reseed_islands(islands, archive)
         evals = state.total_evaluations + n_i * (
             steps_per_epoch * lam + (state.epoch == 0) * cfg.mu)
         return IslandState(islands, archive, state.epoch + 1, evals)
@@ -151,16 +203,58 @@ def make_epoch(cfg: NSGA2Config, eval_fn: Callable, *, lam: int,
 def run_islands(cfg: NSGA2Config, eval_fn, key, *, n_islands: int,
                 lam: int, steps_per_epoch: int, epochs: int,
                 archive_size: int = 1024, checkpoint_fn=None,
-                merge_top_k: int = 0,
+                merge_top_k: int = 0, pipeline: bool = False,
                 start_state: IslandState = None) -> IslandState:
-    """Host loop over epochs (the checkpoint/restart boundary)."""
+    """Host loop over epochs (the checkpoint/restart boundary).
+
+    pipeline=False: bulk-synchronous epochs (one fused device program each).
+    pipeline=True: the double-buffered schedule — merge of epoch k and evolve
+    of epoch k+1 are dispatched back-to-back with no data dependency between
+    them (the reseed feeding evolve k+1 reads the archive of epoch k-1), so
+    jax's async dispatch overlaps evaluation with selection. Archive contents
+    trail by one epoch relative to the synchronous schedule; the final state
+    has every epoch merged."""
     state = start_state if start_state is not None else init_island_state(
         cfg, key, n_islands=n_islands, archive_size=archive_size)
-    epoch = jax.jit(make_epoch(cfg, eval_fn, lam=lam,
-                               steps_per_epoch=steps_per_epoch,
-                               merge_top_k=merge_top_k))
-    for e in range(int(state.epoch), epochs):
-        state = epoch(state)
+    e0 = int(state.epoch)
+    if e0 >= epochs:
+        return state
+
+    if not pipeline:
+        epoch = jax.jit(make_epoch(cfg, eval_fn, lam=lam,
+                                   steps_per_epoch=steps_per_epoch,
+                                   merge_top_k=merge_top_k))
+        for e in range(e0, epochs):
+            state = epoch(state)
+            if checkpoint_fn is not None:
+                checkpoint_fn(state)
+        return state
+
+    evolve = jax.jit(make_evolve(cfg, eval_fn, lam=lam,
+                                 steps_per_epoch=steps_per_epoch))
+    merge_islands = jax.jit(make_merge(cfg, merge_top_k=merge_top_k))
+    reseed_islands = jax.jit(make_reseed(cfg))
+    n_i = state.islands.genomes.shape[0]     # honour start_state's count
+    per_epoch = n_i * steps_per_epoch * lam
+    archive = state.archive
+    evolved = evolve(state.islands)          # epoch e0 evaluation in flight
+    total = state.total_evaluations
+    for e in range(e0, epochs):
+        total = total + per_epoch + (e == 0) * n_i * cfg.mu
+        new_archive = merge_islands(archive, evolved)     # selection, epoch e
+        if e + 1 < epochs:
+            # reseed from the *stale* archive so evolve(e+1) does not wait
+            # for merge(e); both are now in flight together.
+            seeded = reseed_islands(evolved, archive)
+            next_evolved = evolve(seeded)                 # evaluation, e+1
+        archive = new_archive
+        # checkpoint the *seeded* islands (ready to evolve epoch e+1): a
+        # resume then continues the schedule bit-for-bit instead of
+        # silently skipping the boundary reseed.
+        state = IslandState(seeded if e + 1 < epochs else evolved,
+                            archive, jnp.int32(e + 1), jnp.int32(total))
         if checkpoint_fn is not None:
             checkpoint_fn(state)
+        if e + 1 < epochs:
+            evolved = next_evolved
     return state

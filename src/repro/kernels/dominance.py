@@ -1,13 +1,36 @@
-"""Pairwise Pareto-dominance count Pallas kernel — the O(N^2) hot spot of
-NSGA-II non-dominated sorting at the paper's 200k-individual archive scale.
+"""Pairwise Pareto-dominance Pallas kernels — the O(N^2) hot spot of NSGA-II
+non-dominated sorting at the paper's 200k-individual archive scale.
 
-dominated_count[i] = #{ j active : F_j dominates F_i }
-  where "j dominates i"  <=>  all(F_j <= F_i) and any(F_j < F_i)   (minimize).
+Two entry points share one tiling scheme:
+
+``dominated_counts``
+    dominated_count[i] = #{ j active : F_j dominates F_i }
+      where "j dominates i"  <=>  all(F_j <= F_i) and any(F_j < F_i) (minimize).
+
+``dominance_pass``
+    The fused archive-scale sweep: ONE O(N^2) pass that emits both the counts
+    and a packed dominance bitmap streamed to HBM —
+      bit (j mod 32) of bitmap[i, j // 32] = 1  iff  row j of `cols` dominates
+      row i of `rows` (and, when group ids are given, i and j share a group).
+    Front peeling then becomes popcount decrements over the bitmap instead of
+    one full pairwise pass per front (see evolution/nsga2.nondominated_ranks).
 
 Grid = (num_i_blocks, num_j_blocks), j innermost/sequential; the per-i-block
-i32 counter lives in VMEM scratch across j iterations. Objectives are tiny
-(M <= 8), so blocks are (block_i, M) rows vs (block_j, M) columns:
-VMEM = 2 * block * M * 4 B + block_i * 4 B ≈ 17 KB at block=512, M=4.
+i32 counter lives in VMEM scratch across j iterations, the bitmap tile is
+written once per (i, j) step. Objectives are tiny (M <= 8), so blocks are
+(block_i, M) rows vs (block_j, M) columns:
+
+    VMEM ≈ 2*block*M*4 B  (row/col tiles)
+         +   block*4 B    (counter scratch)
+         + block^2 * 1 B  (the dom tile)           ≈ 80 KB at block=256, M=4
+         + block*block/32*4 B (packed words tile)
+
+Indivisible N is handled by padding rows up to a block multiple with +BIG
+sentinel rows: all-BIG rows never strictly dominate anything (<= holds but <
+fails on every objective), so padding adds exactly zero to every count and
+never sets a bitmap bit; callers slice the padding off. This replaces the old
+divisor search, whose worst case (prime N) degraded to block=1 — a grid of
+N^2 single-row steps, pathological on TPU and in interpret mode.
 """
 from __future__ import annotations
 
@@ -17,6 +40,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import ref
 
 # jax <= 0.4.x names it TPUCompilerParams; >= 0.5 CompilerParams
 _CompilerParams = getattr(pltpu, "CompilerParams",
@@ -29,7 +54,29 @@ if _CompilerParams is None:
 BIG = 3.0e38
 
 
-def _dominance_kernel(fi_ref, fj_ref, o_ref, cnt_scr):
+def _ceil_to(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+def effective_block(n: int, block: int, mult: int) -> int:
+    """Block size actually used for an n-row axis: `block` rounded to a
+    multiple of `mult`, shrunk toward n for small inputs (the grid then has a
+    single step instead of streaming empty padding)."""
+    return max(mult, min(_ceil_to(block, mult), _ceil_to(n, mult)))
+
+
+def _pad_rows(x, n_padded, value):
+    n = x.shape[0]
+    if n == n_padded:
+        return x
+    return jnp.concatenate(
+        [x, jnp.full((n_padded - n,) + x.shape[1:], value, x.dtype)])
+
+
+# ---------------------------------------------------------------------------
+# counts-only kernel (kept: the per-front peeling baseline + ga-step sizes)
+# ---------------------------------------------------------------------------
+def _count_kernel(fi_ref, fj_ref, o_ref, cnt_scr):
     ji = pl.program_id(1)
 
     @pl.when(ji == 0)
@@ -55,23 +102,104 @@ def dominated_counts(objectives, *, block=512, interpret=False):
     """objectives: (N, M) f32 (inactive rows pre-masked to +BIG).
     Returns (N,) i32 dominated counts."""
     n, m = objectives.shape
-    block = max(8, min(block, n))
-    if n % block:
-        block = 1 if n < 8 else next(b for b in range(block, 0, -1)
-                                     if n % b == 0)
-    nb = n // block
+    bs = effective_block(n, block, 8)
+    np_ = _ceil_to(n, bs)
+    padded = _pad_rows(objectives, np_, BIG)
+    nb = np_ // bs
     out = pl.pallas_call(
-        functools.partial(_dominance_kernel),
+        _count_kernel,
         grid=(nb, nb),
         in_specs=[
-            pl.BlockSpec((block, m), lambda i, j: (i, 0)),
-            pl.BlockSpec((block, m), lambda i, j: (j, 0)),
+            pl.BlockSpec((bs, m), lambda i, j: (i, 0)),
+            pl.BlockSpec((bs, m), lambda i, j: (j, 0)),
         ],
-        out_specs=pl.BlockSpec((block, 1), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.int32),
-        scratch_shapes=[pltpu.VMEM((block, 1), jnp.int32)],
+        out_specs=pl.BlockSpec((bs, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, 1), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bs, 1), jnp.int32)],
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(objectives, objectives)
-    return out[:, 0]
+    )(padded, padded)
+    return out[:n, 0]
+
+
+# ---------------------------------------------------------------------------
+# fused counts + packed-bitmap kernel (the single-pass selection engine)
+# ---------------------------------------------------------------------------
+def _fused_kernel(fi_ref, fj_ref, gi_ref, gj_ref, cnt_ref, bm_ref, cnt_scr):
+    ji = pl.program_id(1)
+
+    @pl.when(ji == 0)
+    def _init():
+        cnt_scr[...] = jnp.zeros_like(cnt_scr)
+
+    fi = fi_ref[...]                                  # (bi, M)
+    fj = fj_ref[...]                                  # (bj, M)
+    le = (fj[None, :, :] <= fi[:, None, :]).all(-1)   # (bi, bj)
+    lt = (fj[None, :, :] < fi[:, None, :]).any(-1)
+    # group mask: dominance only counts within a group (donor-batched
+    # islands run in one launch; padding carries group -1 = no group)
+    same = gj_ref[...][None, :, 0] == gi_ref[...][:, None, 0]
+    dom = jnp.logical_and(jnp.logical_and(le, lt), same)
+    cnt_scr[...] += dom.astype(jnp.int32).sum(axis=1)[:, None]
+
+    bi, bj = dom.shape
+    bm_ref[...] = ref.pack_words_u32(dom.reshape(bi, bj // 32, 32))
+
+    @pl.when(ji == pl.num_programs(1) - 1)
+    def _finish():
+        cnt_ref[...] = cnt_scr[...]
+
+
+def dominance_pass(rows, cols=None, groups=None, groups_cols=None, *,
+                   block=256, interpret=False):
+    """One fused O(Ni*Nj) sweep of `rows` (candidates) against `cols`
+    (potential dominators). cols=None means the square self-sweep.
+
+    Returns ``(counts, bitmap)``:
+      counts: (Ni,) i32 — number of cols rows dominating each rows row,
+      bitmap: (Ni, ceil32(Nj)/32) u32 — bit (j%32) of word j//32 set iff
+              cols[j] dominates rows[i]; bits past Nj are always 0.
+
+    The rows/cols split is what the mesh-sharded sweep uses: each device takes
+    a row block against the full column set (runtime/sharding.py)."""
+    if cols is None:
+        cols = rows
+        groups_cols = groups
+    ni, m = rows.shape
+    nj = cols.shape[0]
+    if groups is None:
+        groups = jnp.zeros((ni,), jnp.int32)
+    if groups_cols is None:
+        groups_cols = jnp.zeros((nj,), jnp.int32)
+    # j blocks pack 32 columns per output word -> multiple-of-32 blocks
+    bs = effective_block(max(ni, nj), block, 32)
+    ni_p, nj_p = _ceil_to(ni, bs), _ceil_to(nj, bs)
+    rows_p = _pad_rows(rows, ni_p, BIG)
+    cols_p = _pad_rows(cols, nj_p, BIG)
+    gi = _pad_rows(groups.astype(jnp.int32)[:, None], ni_p, -1)
+    gj = _pad_rows(groups_cols.astype(jnp.int32)[:, None], nj_p, -1)
+    wpb = bs // 32
+    cnt, bm = pl.pallas_call(
+        _fused_kernel,
+        grid=(ni_p // bs, nj_p // bs),
+        in_specs=[
+            pl.BlockSpec((bs, m), lambda i, j: (i, 0)),
+            pl.BlockSpec((bs, m), lambda i, j: (j, 0)),
+            pl.BlockSpec((bs, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bs, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bs, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bs, wpb), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((ni_p, 1), jnp.int32),
+            jax.ShapeDtypeStruct((ni_p, nj_p // 32), jnp.uint32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bs, 1), jnp.int32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(rows_p, cols_p, gi, gj)
+    return cnt[:ni, 0], bm[:ni, :_ceil_to(nj, 32) // 32]

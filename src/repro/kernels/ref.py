@@ -50,3 +50,57 @@ def dominated_counts_ref(objectives):
     lt = (objectives[None, :, :] < objectives[:, None, :]).any(-1)
     dom = jnp.logical_and(le, lt)        # dom[i, j] = j dominates i
     return dom.astype(jnp.int32).sum(axis=1)
+
+
+def pack_words_u32(bits):
+    """(..., W, 32) bool -> (..., W) u32 with bit k of word w = bits[..., w, k]
+    — THE bit convention of the dominance bitmap; the kernel, this oracle,
+    and the peeling engine all pack through this one helper."""
+    shift = jax.lax.broadcasted_iota(jnp.uint32, bits.shape, bits.ndim - 1)
+    return jnp.sum(bits.astype(jnp.uint32) << shift, axis=-1,
+                   dtype=jnp.uint32)
+
+
+def dominance_pass_ref(rows, cols=None, groups=None, groups_cols=None):
+    """Oracle for the fused sweep: (counts (Ni,) i32, bitmap (Ni, W) u32)
+    with bit (j%32) of bitmap[i, j//32] set iff cols[j] dominates rows[i]
+    (within the same group when group ids are given). W = ceil32(Nj)/32."""
+    if cols is None:
+        cols = rows
+        groups_cols = groups
+    ni, nj = rows.shape[0], cols.shape[0]
+    le = (cols[None, :, :] <= rows[:, None, :]).all(-1)
+    lt = (cols[None, :, :] < rows[:, None, :]).any(-1)
+    dom = jnp.logical_and(le, lt)                      # (Ni, Nj)
+    if groups is not None:
+        dom = jnp.logical_and(
+            dom, groups_cols[None, :].astype(jnp.int32)
+            == groups[:, None].astype(jnp.int32))
+    counts = dom.astype(jnp.int32).sum(axis=1)
+    w = -(-nj // 32)
+    padded = jnp.pad(dom, ((0, 0), (0, w * 32 - nj)))
+    bitmap = pack_words_u32(padded.reshape(ni, w, 32))
+    return counts, bitmap
+
+
+def nondominated_ranks_ref(objectives, valid=None):
+    """Front-peeling reference for non-dominated sorting: a host-python loop
+    that reruns the full O(N^2) pairwise pass once *per front* (the shape of
+    the pre-engine implementation). (N, M) -> (N,) i32 front index."""
+    import numpy as np
+    obj = np.asarray(objectives, np.float32)
+    n = obj.shape[0]
+    valid = np.ones(n, bool) if valid is None else np.asarray(valid, bool)
+    big = 1.0e30
+    obj = np.where(valid[:, None], obj, big)
+    ranks = np.full(n, n, np.int32)
+    active = valid.copy()
+    r = 0
+    while active.any():
+        masked = np.where(active[:, None], obj, big)
+        counts = np.asarray(dominated_counts_ref(jnp.asarray(masked)))
+        front = active & (counts == 0)
+        ranks[front] = r
+        active &= ~front
+        r += 1
+    return ranks

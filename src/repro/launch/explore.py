@@ -33,7 +33,7 @@ def calibrate(*, reduced: bool = True, n_islands: int = 8, mu: int = 16,
               lam: int = 16, steps_per_epoch: int = 4, epochs: int = 5,
               replicates: int = 5, archive_size: int = 256,
               merge_top_k: int = 8, out_dir: str = "/tmp/ants", mesh=None,
-              printer=print):
+              pipeline: bool = False, printer=print):
     ants_cfg = REDUCED if reduced else CONFIG
     ga_cfg = NSGA2Config(mu=mu, genome_dim=2, bounds=BOUNDS, n_objectives=3)
     eval_fn = replicated_batch(
@@ -57,9 +57,11 @@ def calibrate(*, reduced: bool = True, n_islands: int = 8, mu: int = 16,
 
     # run-record provenance (same schema the workflow scheduler emits):
     # one TaskRecord per committed epoch, resumed epochs marked cache hits
-    record = RunRecord(workflow="ants-calibration", scheduler="islands",
-                       environment=f"mesh{dict(mesh.shape)}",
-                       started_at=_utcnow())
+    record = RunRecord(
+        workflow="ants-calibration",
+        scheduler="islands-pipelined" if pipeline else "islands",
+        environment=f"mesh{dict(mesh.shape)}",
+        started_at=_utcnow())
     run_t0 = time.monotonic()
     cfg_digest = hash_value({
         "reduced": reduced, "n_islands": n_islands, "mu": mu, "lam": lam,
@@ -82,7 +84,7 @@ def calibrate(*, reduced: bool = True, n_islands: int = 8, mu: int = 16,
             task="island_epoch", capsule=e, environment=record.environment,
             inputs_digest=cfg_digest, started_s=last_epoch_t[0] - run_t0,
             wall_s=now - last_epoch_t[0], retries=0, cache_hit=False,
-            mode="lanes"))
+            mode="pipelined" if pipeline else "lanes"))
         last_epoch_t[0] = now
         mask = np.asarray(pareto_front(state.archive))
         obj = np.asarray(state.archive.objectives)
@@ -99,7 +101,8 @@ def calibrate(*, reduced: bool = True, n_islands: int = 8, mu: int = 16,
             ga_cfg, eval_fn, jax.random.key(0), n_islands=n_islands, lam=lam,
             steps_per_epoch=steps_per_epoch, epochs=epochs,
             archive_size=archive_size, checkpoint_fn=on_epoch,
-            merge_top_k=min(merge_top_k, mu), start_state=start)
+            merge_top_k=min(merge_top_k, mu), pipeline=pipeline,
+            start_state=start)
     dt = time.time() - t0
     evals = int(state.total_evaluations)
     printer(f"[explore] done: {evals} evaluations in {dt:.1f}s "
@@ -129,12 +132,16 @@ def main():
     ap.add_argument("--steps-per-epoch", type=int, default=4)
     ap.add_argument("--epochs", type=int, default=5)
     ap.add_argument("--replicates", type=int, default=5)
+    ap.add_argument("--pipeline", action="store_true",
+                    help="double-buffer epochs: evaluation of epoch k+1 "
+                         "overlaps archive selection of epoch k (reseed "
+                         "reads a one-epoch-stale archive, EGI-style)")
     ap.add_argument("--out", default="/tmp/ants")
     args = ap.parse_args()
     calibrate(reduced=args.reduced, n_islands=args.islands, mu=args.mu,
               lam=args.lam, steps_per_epoch=args.steps_per_epoch,
               epochs=args.epochs, replicates=args.replicates,
-              out_dir=args.out)
+              pipeline=args.pipeline, out_dir=args.out)
 
 
 if __name__ == "__main__":

@@ -20,6 +20,7 @@ import math
 from typing import Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # Candidate mesh axes per logical axis name, in priority order. Each
@@ -164,3 +165,66 @@ def constrain(x, logical_axes: Sequence[Optional[str]]):
         return x
     spec = logical_to_spec(logical_axes, x.shape, mesh)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# --------------------------------------------------------------------------
+# Mesh-sharded pairwise dominance sweep (the archive-scale selection engine)
+# --------------------------------------------------------------------------
+_SWEEP_AXES = ("pod", "data")
+
+
+def _sweep_axes(mesh) -> Tuple[str, ...]:
+    if not isinstance(mesh, Mesh):
+        return ()
+    return tuple(a for a in _SWEEP_AXES
+                 if a in mesh.shape and mesh.shape[a] > 1)
+
+
+def sharded_dominance_pass(objectives, groups=None):
+    """Row-block-parallel fused dominance sweep over the active mesh.
+
+    Each device takes a contiguous block of rows against the full column set
+    (objectives are replicated; the O(N^2) compare work splits evenly), then:
+    - counts: every shard scatters its row-block counts into a zero-padded
+      full-length vector and a psum over the sweep axes yields the counts
+      replicated on all devices (the front-peeling loop needs them whole),
+    - bitmap: stays row-sharded across the mesh — N^2/8 bytes of dominance
+      bits never gather onto one device; the peeling popcounts run shard-wise
+      under the same sharding.
+
+    Drop-in ``pass_fn`` for evolution.nsga2.nondominated_ranks; falls back to
+    the single-device fused kernel when no real mesh is active, the sweep
+    axes are trivial, or N does not split evenly.
+    """
+    from repro.kernels import ops as kops   # deferred: keep import DAG thin
+
+    mesh = active_mesh()
+    n = objectives.shape[0]
+    axes = _sweep_axes(mesh)
+    n_shards = math.prod(mesh.shape[a] for a in axes) if axes else 1
+    # each shard's row block must also stay 32-aligned for the bitmap words
+    if n_shards <= 1 or n % (n_shards * 32) or objectives.ndim != 2:
+        return kops.dominance_pass(objectives, groups=groups)
+
+    from jax.experimental.shard_map import shard_map
+    g = groups if groups is not None else jnp.zeros((n,), jnp.int32)
+
+    def sweep(rows, cols, g_rows, g_cols):
+        cnt, bm = kops.dominance_pass(rows, cols, groups=g_rows[:, 0],
+                                      groups_cols=g_cols[:, 0])
+        shard = jnp.int32(0)
+        for a in axes:
+            shard = shard * mesh.shape[a] + jax.lax.axis_index(a)
+        full = jnp.zeros((n,), jnp.int32)
+        full = jax.lax.dynamic_update_slice(full, cnt,
+                                            (shard * rows.shape[0],))
+        return jax.lax.psum(full, axes), bm
+
+    fn = shard_map(
+        sweep, mesh=mesh,
+        in_specs=(P(axes, None), P(None, None), P(axes, None), P(None, None)),
+        out_specs=(P(None), P(axes, None)),
+        check_rep=False,
+    )
+    g2 = g.astype(jnp.int32)[:, None]
+    return fn(objectives, objectives, g2, g2)
