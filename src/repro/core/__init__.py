@@ -9,6 +9,9 @@ from repro.core.source import (Source, ConstantSource, CSVSource,  # noqa
                                FunctionSource)
 from repro.core.environment import (Environment, LocalEnvironment,  # noqa
                                     MeshEnvironment, EGIEnvironment)
+from repro.core.envpool import EnvironmentPool, PoolStats          # noqa
+from repro.core.faults import (FaultSpec, InjectedFailure,         # noqa
+                               ResultCorruption)
 from repro.core.cache import (TaskCache, DEFAULT_CACHE,            # noqa
                               fingerprint_task, inputs_digest)
 from repro.core.scheduler import RunRecord, TaskRecord             # noqa

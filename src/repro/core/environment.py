@@ -23,6 +23,8 @@ from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+from repro.core.faults import (FaultSpec, InjectedFailure, ResultCorruption,
+                               corrupt_output, interruptible_sleep)
 from repro.core.prototype import Context
 from repro.core.task import Task, TaskError
 from repro.runtime import sharding as shd
@@ -34,6 +36,9 @@ class EnvStats:
     completed: int = 0
     retried: int = 0
     speculative_wins: int = 0
+    failed: int = 0        # attempts lost to (injected or real) failures
+    hung: int = 0          # attempts abandoned past timeout_s
+    corrupted: int = 0     # attempts rejected by fingerprint verification
 
 
 class Environment:
@@ -47,20 +52,46 @@ class Environment:
         speculative: >1 over-submits host-side PyTasks that many times and
             keeps the first result (GridScale's EGI trick).
         async_workers: thread-pool width for ``submit_async`` (default 8).
+        capacity: concurrent-task slots this environment offers to an
+            ``EnvironmentPool`` (core/envpool.py) — a 2-core worker vs a
+            whole queue of grid slots.
+        latency_s: fixed per-attempt submission latency (heterogeneous
+            environments differ in queue latency, not only capacity).
+        timeout_s: per-attempt wall-clock budget; an attempt exceeding it
+            counts as hung and is resubmitted (the abandoned attempt's
+            late result is discarded).
+        faults: optional injectable failure model (core/faults.py) used by
+            the chaos tests and the ``egi_200k_init`` benchmark.
+        name: override the environment's display name (pool members need
+            distinguishable names in provenance records).
     """
 
     name = "local"
 
     def __init__(self, *, retries: int = 2, backoff_s: float = 0.1,
-                 speculative: int = 1, async_workers: int = 8):
+                 speculative: int = 1, async_workers: int = 8,
+                 capacity: int = 8, latency_s: float = 0.0,
+                 timeout_s: Optional[float] = None,
+                 faults: Optional[FaultSpec] = None,
+                 name: Optional[str] = None):
         self.retries = retries
         self.backoff_s = backoff_s
         self.speculative = speculative
         self.async_workers = async_workers
+        self.capacity = capacity
+        self.latency_s = latency_s
+        self.timeout_s = timeout_s
+        self.faults = faults
+        if name is not None:
+            self.name = name
         self.stats = EnvStats()
         self._pool: Optional[cf.ThreadPoolExecutor] = None
         self._async_pool: Optional[cf.ThreadPoolExecutor] = None
+        self._attempt_pool: Optional[cf.ThreadPoolExecutor] = None
         self._lock = threading.Lock()
+        # Injected hangs sleep on this event so pool shutdown (or test
+        # teardown) can wake stragglers instead of wedging on them.
+        self._wake = threading.Event()
 
     # -- single task ---------------------------------------------------------
     def submit(self, task: Task, context: Context) -> Context:
@@ -82,16 +113,18 @@ class Environment:
 
         Returns:
             ``(output, meta)`` where ``meta`` has keys ``retries`` (int),
-            ``speculative`` (bool), ``t0`` (monotonic start time), and
-            ``wall_s`` (float) — consumed by the scheduler's provenance
-            records (core/scheduler.py).
+            ``speculative`` (bool), ``t0`` (monotonic start time),
+            ``wall_s`` (float), and ``attempts`` (one dict per attempt:
+            environment, outcome, wall_s) — consumed by the scheduler's
+            per-attempt provenance records (core/scheduler.py).
         """
         meta: Dict[str, Any] = {"retries": 0, "speculative": False,
-                                "t0": time.monotonic(), "wall_s": 0.0}
+                                "t0": time.monotonic(), "wall_s": 0.0,
+                                "attempts": []}
         with self._lock:
             self.stats.submitted += 1
         if task.kind == "py" and self.speculative > 1:
-            out = self._speculative_run(task, context)
+            out = self._speculative_run(task, context, meta)
             meta["speculative"] = True
         else:
             out = self._run_with_retry(task, context, meta)
@@ -117,34 +150,187 @@ class Environment:
                     thread_name_prefix=f"repro-env-{self.name}")
         return self._async_pool.submit(self.submit_traced, task, context)
 
+    # -- attempt machinery ---------------------------------------------------
+    def _job_key(self, task: Task, context: Context) -> str:
+        """Stable identity of one (task, inputs) job for fault decisions.
+        Only computed when a FaultSpec is active (hashing costs)."""
+        from repro.core.cache import inputs_digest
+        return f"{task.name}:{inputs_digest(task, context)}"
+
+    def run_attempt(self, task: Task, context: Context, *, attempt: int = 0,
+                    job: Optional[str] = None
+                    ) -> Tuple[Context, Optional[str]]:
+        """Execute ONE attempt of a task on this environment.
+
+        Applies the environment's latency and — when a :class:`FaultSpec`
+        is installed — the deterministic fault decision for ``(job,
+        attempt)``: injected failures raise, injected hangs sleep
+        (interruptibly) before completing, injected corruption perturbs the
+        output *after* the source-side fingerprint was taken.
+
+        Returns:
+            ``(output, fingerprint)`` — fingerprint is the sha256 of the
+            output as computed at the source, or None when no faults are
+            active (verification is then unnecessary). The caller detects
+            corruption by recomputing the fingerprint on receipt
+            (:meth:`verify_result`).
+        """
+        if self.latency_s:
+            interruptible_sleep(self.latency_s, self._wake)
+        f = self.faults
+        decision = "ok"
+        if f is not None:
+            job = job or self._job_key(task, context)
+            decision = f.decide(job, attempt)
+            if f.latency_s:
+                interruptible_sleep(f.latency_s, self._wake)
+        if decision == "fail":
+            raise InjectedFailure(
+                f"injected failure: {task.name} attempt {attempt} "
+                f"on {self.name}")
+        if decision == "hang":
+            interruptible_sleep(f.hang_s, self._wake)
+        out = task.run(context)
+        if f is None:
+            return out, None
+        from repro.core.cache import hash_context
+        digest = hash_context(out)
+        if decision == "corrupt":
+            out = corrupt_output(out)
+        return out, digest
+
+    @staticmethod
+    def verify_result(out: Context, digest: Optional[str]) -> Context:
+        """Receiver-side integrity check: recompute the output fingerprint
+        and reject mismatches as :class:`ResultCorruption` (transient —
+        the caller resubmits)."""
+        if digest is not None:
+            from repro.core.cache import hash_context
+            if hash_context(out) != digest:
+                raise ResultCorruption("output fingerprint mismatch")
+        return out
+
+    def release_hangs(self) -> None:
+        """Wake every injected hang currently sleeping on this environment
+        (pool shutdown / test teardown); late results are discarded by
+        their abandoned futures."""
+        self._wake.set()
+        self._wake = threading.Event()
+
+    def attempt_once(self, task: Task, context: Context, *, attempt: int = 0,
+                     job: Optional[str] = None) -> Context:
+        """One timeout-bounded, integrity-verified attempt — the shared
+        primitive under both the single-environment retry loop and the
+        pool's cross-member resubmission (core/envpool.py).
+
+        Raises:
+            TimeoutError: the attempt exceeded ``timeout_s`` (counted as
+                hung; the late result is discarded).
+            ResultCorruption: receiver-side fingerprint mismatch.
+            TaskError: declaration bug — callers must not retry it.
+            Exception: whatever the task raised (counted as failed).
+        """
+        try:
+            if self.timeout_s is not None:
+                with self._lock:
+                    if self._attempt_pool is None:
+                        self._attempt_pool = cf.ThreadPoolExecutor(
+                            max_workers=max(self.capacity, 2),
+                            thread_name_prefix=f"repro-att-{self.name}")
+                fut = self._attempt_pool.submit(
+                    self.run_attempt, task, context,
+                    attempt=attempt, job=job)
+                try:
+                    out, digest = fut.result(timeout=self.timeout_s)
+                except cf.TimeoutError:
+                    fut.cancel()           # late result discarded
+                    with self._lock:
+                        self.stats.hung += 1
+                    raise TimeoutError(
+                        f"task {task.name} attempt {attempt} exceeded "
+                        f"{self.timeout_s}s on {self.name}") from None
+            else:
+                out, digest = self.run_attempt(task, context,
+                                               attempt=attempt, job=job)
+        except (TaskError, TimeoutError):
+            raise
+        except Exception:                  # transient (I/O, preemption)
+            with self._lock:
+                self.stats.failed += 1
+            raise
+        try:
+            return self.verify_result(out, digest)
+        except ResultCorruption:
+            with self._lock:
+                self.stats.corrupted += 1
+            raise
+
+    @staticmethod
+    def attempt_outcome(err: Optional[BaseException]) -> str:
+        """Classify an :meth:`attempt_once` exception for provenance."""
+        if err is None:
+            return "ok"
+        if isinstance(err, TimeoutError):
+            return "hang"
+        if isinstance(err, ResultCorruption):
+            return "corrupt"
+        return "fail"
+
     def _run_with_retry(self, task: Task, context: Context,
                         meta: Optional[Dict[str, Any]] = None) -> Context:
         err = None
+        job = self._job_key(task, context) if self.faults is not None else None
         for attempt in range(self.retries + 1):
+            a_t0 = time.monotonic()
             try:
-                return task.run(context)
+                out = self.attempt_once(task, context, attempt=attempt,
+                                        job=job)
+                self._note_attempt(meta, "ok", a_t0)
+                return out
             except TaskError:
                 raise                      # declaration bugs don't retry
-            except Exception as e:         # transient (I/O, preemption)
+            except Exception as e:
                 err = e
-                with self._lock:
-                    self.stats.retried += 1
-                if meta is not None:
-                    meta["retries"] += 1
-                time.sleep(self.backoff_s * (2 ** attempt))
+            self._note_attempt(meta, self.attempt_outcome(err), a_t0, err)
+            with self._lock:
+                self.stats.retried += 1
+            if meta is not None:
+                meta["retries"] += 1
+            interruptible_sleep(self.backoff_s * (2 ** attempt), self._wake)
         raise RuntimeError(
             f"task {task.name} failed after {self.retries + 1} attempts") \
             from err
 
-    def _speculative_run(self, task: Task, context: Context) -> Context:
+    def _note_attempt(self, meta, outcome: str, a_t0: float,
+                      err: Optional[BaseException] = None) -> None:
+        if meta is None:
+            return
+        meta.setdefault("attempts", []).append({
+            "environment": self.name, "outcome": outcome,
+            "wall_s": time.monotonic() - a_t0,
+            "error": None if err is None else f"{type(err).__name__}: {err}"})
+
+    def _speculative_run(self, task: Task, context: Context,
+                         meta: Optional[Dict[str, Any]] = None) -> Context:
         """First-result-wins over `speculative` duplicate submissions —
         straggler mitigation exactly as OpenMOLE over-submits on EGI."""
         with self._lock:
             if self._pool is None:
                 self._pool = cf.ThreadPoolExecutor(max_workers=8)
             pool = self._pool
-        futures = [pool.submit(task.run, context)
-                   for _ in range(self.speculative)]
+        job = self._job_key(task, context) if self.faults is not None else None
+
+        def one(i):
+            a_t0 = time.monotonic()
+            try:
+                out = self.attempt_once(task, context, attempt=i, job=job)
+            except BaseException as e:
+                self._note_attempt(meta, self.attempt_outcome(e), a_t0, e)
+                raise
+            self._note_attempt(meta, "ok", a_t0)
+            return out
+
+        futures = [pool.submit(one, i) for i in range(self.speculative)]
         err = None
         for f in cf.as_completed(futures):
             try:

@@ -60,6 +60,9 @@ class TaskRecord:
     cache_hit: bool                # True when served from the memo cache
     mode: str                      # "submit" | "lanes" | "cache"
     cache_key: Optional[str] = None  # content address (None when cache off)
+    attempts: Optional[List[Dict[str, Any]]] = None
+    # ^ per-attempt trace (environment, outcome, wall_s, error) from
+    #   fault-tolerant environments/pools; None for single-shot firings
 
 
 @dataclasses.dataclass
@@ -150,8 +153,14 @@ def _fire_capsule(capsule, contexts, cenv, cache: Optional[TaskCache],
                     cache_hit=False, mode="lanes")
         else:
             if use_async and len(miss_ctxs) > 1:
-                futures = [cenv.submit_async(task, c) for c in miss_ctxs]
-                traced = [f.result() for f in futures]
+                # harvest on completion events (not submission order): a
+                # straggler point never blocks collection of the others;
+                # results land by index so output order stays serial-exact.
+                futures = {cenv.submit_async(task, c): j
+                           for j, c in enumerate(miss_ctxs)}
+                traced: List[Any] = [None] * len(miss_ctxs)
+                for f in cf.as_completed(futures):
+                    traced[futures[f]] = f.result()
             else:
                 traced = [cenv.submit_traced(task, c) for c in miss_ctxs]
             for (i, digest, key), (out, meta) in zip(misses, traced):
@@ -160,7 +169,8 @@ def _fire_capsule(capsule, contexts, cenv, cache: Optional[TaskCache],
                     task=task.name, capsule=capsule.id, environment=cenv.name,
                     inputs_digest=digest, cache_key=key,
                     started_s=meta["t0"] - run_t0, wall_s=meta["wall_s"],
-                    retries=meta["retries"], cache_hit=False, mode="submit")
+                    retries=meta["retries"], cache_hit=False, mode="submit",
+                    attempts=meta.get("attempts") or None)
         if cache is not None:
             for i, _digest, key in misses:
                 cache.put(key, outs[i])

@@ -1,5 +1,10 @@
 from repro.evolution.nsga2 import NSGA2Config  # noqa
-from repro.evolution.ga import GAState, init_state, make_step, run_generational  # noqa
+from repro.evolution import ga  # noqa
+from repro.evolution.ga import (GAState, StreamingResult,  # noqa
+                                evaluate_population_streaming,
+                                init_state, init_state_from_population,
+                                make_step, run_generational,
+                                select_top_streaming)
 from repro.evolution.island import (IslandState, init_island_state,  # noqa
                                     make_epoch, make_evolve, make_merge,
                                     make_reseed, run_islands)

@@ -318,6 +318,32 @@ def run_ga_cell(mesh_kind: str, out_path: str, *, n_islands=2048, mu=32,
           f"({record['total_s']}s)")
 
 
+def audit_dryrun_artifacts(directory, meshes=("pod", "multipod"),
+                           cells=None):
+    """Audit a dry-run artifact directory against the config registry.
+
+    Returns ``(missing, bad)``: cells whose record file is absent, and
+    runnable cells whose record is not status "ok". Factored out of the
+    tier-1 artifact gate so the audit logic itself is testable without the
+    (hours-long) ``--all`` sweep having run.
+    """
+    if cells is None:
+        from repro.configs import all_cells
+        cells = list(all_cells())
+    missing, bad = [], []
+    for mesh in meshes:
+        for arch, _cfg, shape, status in cells:
+            path = os.path.join(directory, f"{mesh}__{arch}__{shape.name}.json")
+            if not os.path.exists(path):
+                missing.append((mesh, arch, shape.name))
+                continue
+            with open(path) as f:
+                rec = json.load(f)
+            if status == "run" and rec.get("status") != "ok":
+                bad.append((mesh, arch, shape.name, rec.get("status")))
+    return missing, bad
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")

@@ -19,21 +19,38 @@ import numpy as np
 from repro import checkpoint
 from repro.ants import simulate_batch
 from repro.configs.ants_netlogo import BOUNDS, CONFIG, REDUCED
-from repro.core import SavePopulationHook, Context
+from repro.core import (Context, EnvironmentPool, FaultSpec,
+                        LocalEnvironment, SavePopulationHook)
 from repro.core.cache import hash_value
 from repro.core.scheduler import RunRecord, TaskRecord, _utcnow
-from repro.evolution import (NSGA2Config, init_island_state, make_epoch,
+from repro.evolution import (NSGA2Config, ga, init_island_state, make_epoch,
                              pareto_front, run_islands)
 from repro.explore import replicated_batch
 from repro.launch.mesh import make_host_mesh
 from repro.runtime import sharding as shd
 
 
+def make_init_pool(fault_rate: float = 0.0, *, workers: int = 3,
+                   capacity: int = 2, retries: int = 8,
+                   timeout_s: float = None) -> EnvironmentPool:
+    """The streaming-init evaluation pool: a few heterogeneous local
+    workers, optionally with an injected per-attempt failure rate (the
+    paper's unreliable-EGI regime, reproduced on one host)."""
+    envs = [LocalEnvironment(
+        name=f"worker{i}", capacity=capacity, timeout_s=timeout_s,
+        faults=(FaultSpec(fail_rate=fault_rate, seed=i)
+                if fault_rate > 0 else None))
+        for i in range(workers)]
+    return EnvironmentPool(envs, retries=retries, backoff_s=0.05)
+
+
 def calibrate(*, reduced: bool = True, n_islands: int = 8, mu: int = 16,
               lam: int = 16, steps_per_epoch: int = 4, epochs: int = 5,
               replicates: int = 5, archive_size: int = 256,
               merge_top_k: int = 8, out_dir: str = "/tmp/ants", mesh=None,
-              pipeline: bool = False, printer=print):
+              pipeline: bool = False, init_population: int = 0,
+              init_chunk: int = 2048, fault_rate: float = 0.0,
+              printer=print):
     ants_cfg = REDUCED if reduced else CONFIG
     ga_cfg = NSGA2Config(mu=mu, genome_dim=2, bounds=BOUNDS, n_objectives=3)
     eval_fn = replicated_batch(
@@ -54,6 +71,7 @@ def calibrate(*, reduced: bool = True, n_islands: int = 8, mu: int = 16,
     if (last := checkpoint.latest_step(ckpt_dir)) is not None:
         start = checkpoint.restore(ckpt_dir, last, state_sds)
         printer(f"[explore] resumed at epoch {last}")
+    init_record = None
 
     # run-record provenance (same schema the workflow scheduler emits):
     # one TaskRecord per committed epoch, resumed epochs marked cache hits
@@ -95,6 +113,48 @@ def calibrate(*, reduced: bool = True, n_islands: int = 8, mu: int = 16,
                 f"front={int(mask.sum())} "
                 f"best t1={obj[mask, 0].min() if mask.any() else float('nan'):.0f}")
 
+    # -- paper-scale streaming init: evaluate a large initial population
+    # through the (optionally fault-injected) environment pool, in chunks,
+    # with mid-population checkpoint/resume; seed the islands from its top
+    # individuals. Skipped when resuming past epoch 0 (the island state
+    # already embodies it).
+    if init_population and start is None:
+        if init_population < n_islands * mu:
+            raise ValueError(
+                f"--init-population must cover the island populations: "
+                f"need >= n_islands*mu = {n_islands * mu}, "
+                f"got {init_population}")
+        pool = make_init_pool(fault_rate)
+        try:
+            sres = ga.evaluate_population_streaming(
+                ga_cfg, eval_fn, 0, n_total=init_population,
+                chunk=init_chunk, environment=pool, record=record,
+                checkpoint_dir=os.path.join(out_dir, "init_checkpoints"),
+                progress=lambda k, n: printer(
+                    f"[explore] init chunk {k}/{n}") if k % 8 == 0 else None)
+        finally:
+            pool.shutdown()
+        printer(f"[explore] init: {init_population} individuals in "
+                f"{sres.wall_s:.1f}s ({sres.attempts} attempts, "
+                f"{sres.resumed_chunks} chunks resumed) -> "
+                f"{init_population / max(sres.wall_s, 1e-9) * 3600:.0f} "
+                f"evals/hour")
+        top_g, top_o = ga.select_top_streaming(
+            ga_cfg, sres.genomes, sres.objectives, n_islands * mu)
+        st0 = init_island_state(ga_cfg, jax.random.key(0),
+                                n_islands=n_islands,
+                                archive_size=archive_size)
+        islands = st0.islands._replace(
+            genomes=jnp.asarray(top_g).reshape(n_islands, mu, -1),
+            objectives=jnp.asarray(top_o).reshape(n_islands, mu, -1),
+            valid=jnp.ones((n_islands, mu), bool))
+        # epoch-0 accounting re-adds n_islands*mu for the (skipped) initial
+        # evaluation; pre-subtract so the total counts init_population once
+        start = st0._replace(
+            islands=islands,
+            total_evaluations=jnp.int32(init_population - n_islands * mu))
+        init_record = sres
+
     t0 = time.time()
     with shd.use_mesh(mesh):
         state = run_islands(
@@ -116,6 +176,12 @@ def calibrate(*, reduced: bool = True, n_islands: int = 8, mu: int = 16,
         "evaluations": evals,
         "wall_s": dt,
     }
+    if init_record is not None:
+        front["init"] = {"n_individuals": init_population,
+                         "wall_s": init_record.wall_s,
+                         "attempts": init_record.attempts,
+                         "resumed_chunks": init_record.resumed_chunks,
+                         "fault_rate": fault_rate}
     with open(os.path.join(out_dir, "pareto_front.json"), "w") as f:
         json.dump(front, f, indent=2)
     record.finalize(dt)
@@ -136,12 +202,25 @@ def main():
                     help="double-buffer epochs: evaluation of epoch k+1 "
                          "overlaps archive selection of epoch k (reseed "
                          "reads a one-epoch-stale archive, EGI-style)")
+    ap.add_argument("--init-population", type=int, default=0,
+                    help="evaluate a large initial population (the paper's "
+                         "200000) through the fault-tolerant environment "
+                         "pool before the island run, streaming in "
+                         "--init-chunk jobs with mid-population "
+                         "checkpoint/resume; islands seed from its top "
+                         "individuals")
+    ap.add_argument("--init-chunk", type=int, default=2048)
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="injected per-attempt job-failure rate for the "
+                         "init pool (chaos mode; results stay bit-exact)")
     ap.add_argument("--out", default="/tmp/ants")
     args = ap.parse_args()
     calibrate(reduced=args.reduced, n_islands=args.islands, mu=args.mu,
               lam=args.lam, steps_per_epoch=args.steps_per_epoch,
               epochs=args.epochs, replicates=args.replicates,
-              pipeline=args.pipeline, out_dir=args.out)
+              pipeline=args.pipeline, init_population=args.init_population,
+              init_chunk=args.init_chunk, fault_rate=args.fault_rate,
+              out_dir=args.out)
 
 
 if __name__ == "__main__":
