@@ -3,3 +3,5 @@ from repro.explore.sampling import (Sampling, GridSampling, UniformSampling,  # 
                                     CrossSampling)
 from repro.explore.statistics import StatisticTask, median, mean, std, q  # noqa
 from repro.explore.replication import Replicate, replicated, replicated_batch  # noqa
+from repro.explore.surrogate import (SurrogateConfig, SurrogateExplorer,  # noqa
+                                     SurrogateResult, run_surrogate)

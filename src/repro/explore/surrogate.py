@@ -1,0 +1,592 @@
+"""Surrogate-assisted adaptive exploration: a batched Gaussian-process
+ask/tell engine with q-EI / q-UCB batch acquisition.
+
+The static samplers (Sobol/LHS/grid) and the GA spend their evaluation
+budget blindly; for *expensive* models (the paper's raison d'être) the
+budget is the cost, so the engine that decides the next batch from all
+evidence so far is the cost-saver (PaPaS, arXiv:1807.09632). This module
+closes that gap:
+
+- **GP core** (``gp_fit`` / ``gp_posterior``): inputs normalized to the
+  unit cube, outputs standardized; covariance assembly routed through the
+  fused Pallas kernel (:mod:`repro.kernels.gp` via ``kernels.ops``
+  backend gating); lengthscale chosen from a fixed grid by marginal
+  likelihood (vmapped Cholesky sweep, PSD-jittered); everything jitted.
+- **Batch acquisition** (``q_ei`` / ``q_ucb``): Monte-Carlo over the joint
+  posterior of the q-point batch (Cornell-MOE's q-EI). The normal draws
+  are keyed per *batch slot* (``fold_in(key, slot)``), so nested batches
+  share their common slots' draws and q-EI is *exactly* monotone in q —
+  the property tests/test_surrogate.py pins.
+- **Proposals** (``propose_batch``): the acquisition is maximized jointly
+  over the (q, dim) batch by a vmapped multi-start projected-gradient
+  ascent — one device program per round, no python in the loop.
+- **Ask/tell** (:class:`SurrogateExplorer`): ``ask()`` returns the next
+  priority-ordered batch (Sobol space-filling until ``n_init`` points
+  exist, GP proposals after); ``tell()`` feeds results back. Both are
+  deterministic functions of (config, seed, history).
+- **Asynchronous driver** (``run_surrogate``): streams each round's batch
+  through ``Environment/EnvironmentPool.submit_async`` and — OSPREY-style
+  (NSF-RESUME ParSocial example) — re-scores the still-queued candidates
+  as results arrive, re-prioritizing the dispatch queue under the
+  partially-updated posterior. Checkpoint/resume at round boundaries,
+  like ``ga.evaluate_population_streaming``.
+
+Determinism and bit-exactness under chaos: *what* is evaluated each round
+is a pure function of (config, seed, told history) — the adaptive
+re-prioritization only reorders *dispatch* of the already-chosen batch,
+and ``tell`` consumes results in slot order at the round barrier. Where
+and when jobs run (failures, retries, speculation, arrival order) can
+therefore never change the trajectory: a 35%-fault chaos run is
+bit-identical to the failure-free run (tests/test_fault_tolerance.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.explore.sampling import _sobol_points
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class SurrogateConfig:
+    """Configuration of the GP surrogate and its acquisition optimizer.
+
+    bounds: ((lo, hi), ...) physical box, one pair per genome dim.
+    kernel: "matern52" or "rbf".
+    noise: observation noise variance (standardized-y units).
+    jitter: PSD jitter added to every Cholesky.
+    lengthscales: the marginal-likelihood fit grid (unit-cube units).
+        A length-1 grid freezes the lengthscale (fully static path).
+    q: proposals per ask/tell round.
+    n_init: Sobol space-filling points before the GP takes over
+        (rounded up to a multiple of q so every round has exactly q slots).
+    mc_samples: Monte-Carlo draws for the batch acquisition.
+    n_starts / opt_steps / opt_lr: the vmapped multi-start optimizer.
+    ucb_beta: exploration weight of q-UCB.
+    acquisition: "qei" or "qucb".
+    seed: master seed — the whole trajectory is a pure function of it.
+    """
+    bounds: Tuple[Tuple[float, float], ...]
+    kernel: str = "matern52"
+    noise: float = 1e-4
+    jitter: float = 1e-6
+    lengthscales: Tuple[float, ...] = (0.05, 0.1, 0.2, 0.4, 0.8)
+    q: int = 8
+    n_init: int = 16
+    mc_samples: int = 96
+    n_starts: int = 12
+    opt_steps: int = 24
+    opt_lr: float = 0.08
+    ucb_beta: float = 2.0
+    acquisition: str = "qei"
+    seed: int = 0
+
+    @property
+    def dim(self) -> int:
+        return len(self.bounds)
+
+    @property
+    def n_init_padded(self) -> int:
+        return -(-self.n_init // self.q) * self.q
+
+    def lo(self):
+        return jnp.asarray([b[0] for b in self.bounds], jnp.float32)
+
+    def hi(self):
+        return jnp.asarray([b[1] for b in self.bounds], jnp.float32)
+
+
+class GPState(NamedTuple):
+    """A fitted GP: unit-cube inputs + Cholesky of the (jittered) train
+    covariance + precomputed solve; y is standardized inside."""
+    x: jnp.ndarray            # (n, d) unit-cube inputs
+    chol: jnp.ndarray         # (n, n) L with L L^T = K + (noise+jitter) I
+    alpha: jnp.ndarray        # (n,)  (K + (noise+jitter) I)^-1 y_std
+    y_mean: jnp.ndarray       # ()
+    y_std: jnp.ndarray        # ()
+    lengthscale: jnp.ndarray  # ()
+    best: jnp.ndarray         # () standardized incumbent (min observed)
+
+
+# ---------------------------------------------------------------------------
+# GP core
+# ---------------------------------------------------------------------------
+def gp_fit(cfg: SurrogateConfig, x, y) -> GPState:
+    """Fit the GP on unit-cube x (n, d) and raw y (n,): standardize y,
+    sweep the lengthscale grid by exact negative log marginal likelihood
+    (one vmapped Cholesky per grid point over ONE fused distance matrix),
+    and factor the winner. jit-able; PSD is maintained by `noise+jitter`
+    on the diagonal."""
+    n = x.shape[0]
+    y_mean = y.mean()
+    y_std = jnp.maximum(y.std(), 1e-8)
+    ys = (y - y_mean) / y_std
+    d2 = kops.gp_sqdist(x, x)
+    eye = jnp.eye(n, dtype=jnp.float32)
+
+    def factor(ls):
+        k = kref.gp_kernel_fn(cfg.kernel, d2, ls, 1.0) \
+            + (cfg.noise + cfg.jitter) * eye
+        chol = jnp.linalg.cholesky(k)
+        alpha = jax.scipy.linalg.cho_solve((chol, True), ys)
+        return chol, alpha
+
+    def nll(ls):
+        chol, alpha = factor(ls)
+        return 0.5 * ys @ alpha + jnp.log(jnp.diagonal(chol)).sum()
+
+    grid = jnp.asarray(cfg.lengthscales, jnp.float32)
+    if grid.shape[0] == 1:
+        ls = grid[0]
+    else:
+        ls = grid[jnp.argmin(jax.vmap(nll)(grid))]
+    chol, alpha = factor(ls)
+    return GPState(x=x, chol=chol, alpha=alpha, y_mean=y_mean, y_std=y_std,
+                   lengthscale=ls, best=ys.min())
+
+
+def gp_posterior(cfg: SurrogateConfig, state: GPState, xq):
+    """Joint posterior of the batch xq (m, d) in standardized units:
+    mean (m,) and full covariance (m, m) (symmetrized, for the batch
+    acquisition's Cholesky).
+
+    Cross-covariances here assemble through ``ref.gp_sqdist_ref`` directly
+    (not the ops-gated kernel): the acquisition optimizer differentiates
+    and vmaps through this function, and Pallas calls carry no VJP/batching
+    rules — while the m x n cross blocks are small. The big N x N train
+    assembly in :func:`gp_fit` is where the fused kernel runs. Both paths
+    are the same ops, so posteriors stay bit-identical either way."""
+    ks = kref.gp_kernel_fn(cfg.kernel, kref.gp_sqdist_ref(xq, state.x),
+                           state.lengthscale, 1.0)           # (m, n)
+    mean = ks @ state.alpha
+    v = jax.scipy.linalg.solve_triangular(state.chol, ks.T, lower=True)
+    kq = kref.gp_kernel_fn(cfg.kernel, kref.gp_sqdist_ref(xq, xq),
+                           state.lengthscale, 1.0)
+    cov = kq - v.T @ v
+    cov = 0.5 * (cov + cov.T)
+    return mean, cov
+
+
+def gp_mean_var(cfg: SurrogateConfig, state: GPState, xq):
+    """Marginal posterior mean/variance (m,) in standardized units —
+    the cheap per-point view (re-scoring, plots, tests)."""
+    ks = kref.gp_kernel_fn(cfg.kernel, kref.gp_sqdist_ref(xq, state.x),
+                           state.lengthscale, 1.0)
+    mean = ks @ state.alpha
+    v = jax.scipy.linalg.solve_triangular(state.chol, ks.T, lower=True)
+    var = jnp.maximum(1.0 - (v * v).sum(0), cfg.jitter)
+    return mean, var
+
+
+# ---------------------------------------------------------------------------
+# batch acquisition (maximize; minimization of the objective)
+# ---------------------------------------------------------------------------
+def _slot_normals(key, q: int, n_samples: int):
+    """(n_samples, q) standard normals where column i depends ONLY on
+    (key, i): nested batches share their common slots' draws, which makes
+    the Monte-Carlo q-EI exactly monotone in q (the Cholesky of a leading
+    principal submatrix is the leading block of the Cholesky)."""
+    cols = [jax.random.normal(jax.random.fold_in(key, i), (n_samples,),
+                              jnp.float32) for i in range(q)]
+    return jnp.stack(cols, axis=1)
+
+
+def q_ei(mean, cov, best, *, key, n_samples: int = 96, jitter: float = 1e-6):
+    """Monte-Carlo q-EI (minimization): E[max(best - min_i Y_i, 0)] over
+    joint posterior samples Y = mean + L z of the batch."""
+    q = mean.shape[0]
+    chol = jnp.linalg.cholesky(cov + jitter * jnp.eye(q, dtype=cov.dtype))
+    z = _slot_normals(key, q, n_samples)
+    samples = mean[None, :] + z @ chol.T
+    return jnp.maximum(best - samples.min(axis=1), 0.0).mean()
+
+
+def q_ucb(mean, cov, beta, *, key, n_samples: int = 96, jitter: float = 1e-6):
+    """Monte-Carlo q-UCB (minimization form): E[max_i (beta |L z|_i -
+    mean_i)] — optimistic best-case of the batch under correlated draws."""
+    q = mean.shape[0]
+    chol = jnp.linalg.cholesky(cov + jitter * jnp.eye(q, dtype=cov.dtype))
+    z = _slot_normals(key, q, n_samples)
+    samples = mean[None, :] - beta * jnp.abs(z @ chol.T)
+    return (-samples.min(axis=1)).mean()
+
+
+def expected_improvement(mean, var, best):
+    """Closed-form single-point EI (minimization) — the per-candidate
+    priority score used for dispatch ordering and re-prioritization."""
+    sigma = jnp.sqrt(var)
+    u = (best - mean) / sigma
+    phi = jnp.exp(-0.5 * u * u) / jnp.sqrt(2.0 * jnp.pi)
+    cdf = 0.5 * (1.0 + jax.scipy.special.erf(u / jnp.sqrt(2.0)))
+    return (best - mean) * cdf + sigma * phi
+
+
+def propose_batch(cfg: SurrogateConfig, state: GPState, key):
+    """Maximize the batch acquisition jointly over (q, dim) with a vmapped
+    multi-start projected-gradient ascent. Returns (batch (q, d) in the
+    unit cube, acquisition value)."""
+
+    def score(xq):
+        mean, cov = gp_posterior(cfg, state, xq)
+        if cfg.acquisition == "qucb":
+            return q_ucb(mean, cov, cfg.ucb_beta, key=jax.random.fold_in(
+                key, 1), n_samples=cfg.mc_samples, jitter=cfg.jitter * 10.0)
+        return q_ei(mean, cov, state.best, key=jax.random.fold_in(key, 1),
+                    n_samples=cfg.mc_samples, jitter=cfg.jitter * 10.0)
+
+    grad_fn = jax.value_and_grad(score)
+
+    def ascend(x0):
+        def body(x, _):
+            val, g = grad_fn(x)
+            g = jnp.nan_to_num(g)
+            x = jnp.clip(
+                x + cfg.opt_lr * g / (jnp.linalg.norm(g) + 1e-12), 0.0, 1.0)
+            return x, val
+        x, _ = jax.lax.scan(body, x0, None, length=cfg.opt_steps)
+        return x, score(x)
+
+    starts = jax.random.uniform(jax.random.fold_in(key, 0),
+                                (cfg.n_starts, cfg.q, cfg.dim), jnp.float32)
+    xs, vals = jax.vmap(ascend)(starts)
+    i = jnp.argmax(vals)
+    return xs[i], vals[i]
+
+
+@functools.lru_cache(maxsize=32)
+def _jitted(cfg: SurrogateConfig):
+    """Per-config jitted engine functions. Cached on the (frozen, hashable)
+    config so repeated runs — the chaos suite's clean/chaos/resume triples,
+    benches — share compilations instead of re-jitting per explorer."""
+    fit = jax.jit(functools.partial(gp_fit, cfg))
+    propose = jax.jit(functools.partial(propose_batch, cfg))
+    score = jax.jit(lambda st, xq: expected_improvement(
+        *gp_mean_var(cfg, st, xq), st.best))
+    return fit, propose, score
+
+
+# ---------------------------------------------------------------------------
+# ask/tell
+# ---------------------------------------------------------------------------
+class SurrogateExplorer:
+    """Deterministic ask/tell surrogate explorer.
+
+    ``ask()`` returns the next batch of ``cfg.q`` physical-space genomes,
+    highest dispatch priority first; ``tell(x, y)`` feeds results back in
+    ask order. The trajectory is a pure function of (cfg, telled history):
+    round r's batch depends only on the points told for rounds < r.
+    """
+
+    def __init__(self, cfg: SurrogateConfig):
+        self.cfg = cfg
+        d = cfg.dim
+        self.x01 = np.zeros((0, d), np.float32)   # unit-cube history
+        self.y = np.zeros((0,), np.float32)
+        self.round = 0
+        self._sobol = _sobol_points(cfg.n_init_padded, d,
+                                    cfg.seed).astype(np.float32)
+        self._lo = np.asarray(cfg.lo())
+        self._span = np.asarray(cfg.hi()) - self._lo
+        self._fit, self._propose, self._score = _jitted(cfg)
+        self.last_state: Optional[GPState] = None
+        self.last_priorities: Optional[np.ndarray] = None
+        self._rescore_cache = None     # ((round, ls), chol of history K)
+
+    # -------------------------------------------------------------- state io
+    def state_arrays(self):
+        """Checkpointable state: the telled history + round counter."""
+        return {"x01": self.x01, "y": self.y,
+                "round": np.int32(self.round)}
+
+    def load_state_arrays(self, tree) -> None:
+        self.x01 = np.asarray(tree["x01"], np.float32)
+        self.y = np.asarray(tree["y"], np.float32)
+        self.round = int(tree["round"])
+
+    # --------------------------------------------------------------- ask/tell
+    def _round_key(self):
+        return jax.random.fold_in(jax.random.key(self.cfg.seed), self.round)
+
+    def ask(self) -> np.ndarray:
+        """Next batch, (q, dim) physical coordinates, priority-ordered."""
+        cfg = self.cfg
+        n = len(self.x01)
+        if n < cfg.n_init_padded:
+            batch01 = self._sobol[n:n + cfg.q]
+            self.last_state = None
+            self.last_priorities = np.arange(cfg.q, 0.0, -1.0,
+                                             dtype=np.float32)
+        else:
+            state = self._fit(jnp.asarray(self.x01), jnp.asarray(self.y))
+            batch01, _ = self._propose(state, self._round_key())
+            prio = np.asarray(self._score(state, batch01))
+            order = np.argsort(-prio, kind="stable")
+            batch01 = np.asarray(batch01)[order]
+            self.last_state = state
+            self.last_priorities = prio[order]
+        return self._lo + np.asarray(batch01, np.float32) * self._span
+
+    def tell(self, x, y) -> None:
+        """Record a completed batch (physical x (m, d), objectives y (m,)),
+        in ask order — the round barrier."""
+        x01 = (np.asarray(x, np.float32) - self._lo) / self._span
+        self.x01 = np.concatenate(
+            [self.x01, np.clip(x01, 0.0, 1.0).astype(np.float32)])
+        self.y = np.concatenate([self.y, np.asarray(y, np.float32)])
+        self.round += 1
+
+    @property
+    def best(self):
+        """(best_x physical, best_y) observed so far (None before data)."""
+        if len(self.y) == 0:
+            return None, None
+        i = int(np.argmin(self.y))
+        return self._lo + self.x01[i] * self._span, float(self.y[i])
+
+    def rescore(self, partial_x01, partial_y, pending01) -> np.ndarray:
+        """OSPREY-style re-prioritization: score still-pending candidates
+        (k, d) under the posterior updated with this round's partial
+        results — float64 numpy (no jit churn on ragged shapes). Affects
+        dispatch ORDER only, never what is evaluated, so chaos runs stay
+        bit-exact.
+
+        The Cholesky of the n-point *history* covariance is computed once
+        per round (cached) and extended with the round's landed rows by a
+        bordered rank-k update, so each arrival costs O(n^2 k), not a
+        fresh O(n^3) refit."""
+        import scipy.linalg
+        cfg = self.cfg
+        ls = float(self.last_state.lengthscale) \
+            if self.last_state is not None \
+            else float(cfg.lengthscales[len(cfg.lengthscales) // 2])
+        hist = self.x01.astype(np.float64)
+        n = len(hist)
+
+        def kmat(a, b):
+            d2 = ((a[:, None, :] - b[None, :, :]) ** 2).sum(-1)
+            return np.asarray(kref.gp_kernel_fn(
+                cfg.kernel, jnp.asarray(d2), ls, 1.0))
+
+        nugget = cfg.noise + cfg.jitter
+        cache = self._rescore_cache
+        if cache is None or cache[0] != (self.round, ls):
+            l11 = np.linalg.cholesky(kmat(hist, hist)
+                                     + nugget * np.eye(n))
+            self._rescore_cache = cache = ((self.round, ls), l11)
+        l11 = cache[1]
+        xp = np.asarray(partial_x01, np.float64)
+        k = len(xp)
+        b = kmat(xp, hist)                                    # (k, n)
+        l21 = scipy.linalg.solve_triangular(
+            l11, b.T, lower=True).T if n else np.zeros((k, 0))
+        l22 = np.linalg.cholesky(kmat(xp, xp) + nugget * np.eye(k)
+                                 - l21 @ l21.T)
+        chol = np.block([[l11, np.zeros((n, k))], [l21, l22]])
+        x = np.concatenate([hist, xp])
+        y = np.concatenate(
+            [self.y, np.asarray(partial_y, np.float32)]).astype(np.float64)
+        mean_y, std_y = y.mean(), max(float(y.std()), 1e-8)
+        ys = (y - mean_y) / std_y
+        alpha = scipy.linalg.cho_solve((chol, True), ys)
+        ks = kmat(np.asarray(pending01, np.float64), x)
+        mean = ks @ alpha
+        v = scipy.linalg.solve_triangular(chol, ks.T, lower=True)
+        var = np.maximum(1.0 - (v * v).sum(0), cfg.jitter)
+        return np.asarray(expected_improvement(
+            jnp.asarray(mean), jnp.asarray(var), jnp.asarray(ys.min())))
+
+
+# ---------------------------------------------------------------------------
+# asynchronous driver
+# ---------------------------------------------------------------------------
+class SurrogateResult(NamedTuple):
+    """Outcome of one (possibly interrupted/resumed) surrogate run."""
+    genomes: Optional[np.ndarray]      # (n, d) physical — None if interrupted
+    objectives: Optional[np.ndarray]   # (n,)
+    best_genome: Optional[np.ndarray]
+    best_objective: Optional[float]
+    rounds_done: int
+    rounds_total: int
+    resumed_rounds: int
+    interrupted: bool
+    attempts: int                      # environment attempts incl. retries
+    repriorities: int                  # OSPREY-style queue re-orderings
+    wall_s: float
+
+
+def make_eval_task(cfg: SurrogateConfig, eval_fn: Callable):
+    """One proposal evaluation as a PyTask: the context carries (round,
+    slot, genome tuple); the PRNG key regenerates from (seed, round, slot)
+    inside the job — pure, resubmittable, fingerprint-verifiable."""
+    from repro.core.prototype import Val
+    from repro.core.task import PyTask
+    jeval = jax.jit(eval_fn)
+
+    def fn(ctx):
+        r, s = int(ctx["round"]), int(ctx["slot"])
+        x = np.asarray(ctx["x"], np.float32)[None, :]
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.key(cfg.seed), r), s)
+        keys = jax.random.split(key, 1)
+        return {"y": float(np.asarray(jeval(keys, jnp.asarray(x)))[0])}
+
+    return PyTask("propose_eval", fn,
+                  inputs=(Val("round", int), Val("slot", int), Val("x")),
+                  outputs=(Val("y", float),))
+
+
+def run_surrogate(cfg: SurrogateConfig, eval_fn: Callable, *,
+                  rounds: int, environment=None, max_inflight: int = None,
+                  checkpoint_dir: str = None, checkpoint_every: int = 1,
+                  stop_after_rounds: Optional[int] = None, record=None,
+                  progress: Callable[[int, int], None] = None
+                  ) -> SurrogateResult:
+    """Drive the ask/tell loop for ``rounds`` rounds of ``cfg.q``
+    evaluations each, optionally through a (fault-injected) Environment or
+    EnvironmentPool.
+
+    Each round: ``ask()`` fixes the batch; jobs stream through
+    ``submit_async`` up to ``max_inflight`` at a time, highest acquisition
+    priority first; every arrival triggers an OSPREY-style re-score of the
+    still-queued slots (dispatch order only — see module docstring); the
+    round barrier ``tell``s results in slot order. With ``checkpoint_dir``
+    the history commits every ``checkpoint_every`` rounds and the run
+    resumes from the newest commit; ``stop_after_rounds`` is the mid-run
+    kill switch the resume tests/benches drive.
+
+    ``eval_fn(keys (n,), genomes (n, d)) -> (n,) scalars`` (minimized).
+    """
+    from repro import checkpoint
+    from repro.core.cache import inputs_digest
+    from repro.core.prototype import Context
+    from repro.core.scheduler import TaskRecord
+
+    t0 = time.monotonic()
+    task = make_eval_task(cfg, eval_fn)
+    explorer = SurrogateExplorer(cfg)
+    q, d = cfg.q, cfg.dim
+
+    # -- resume: restore the history committed last run ---------------------
+    resumed = 0
+    if checkpoint_dir is not None:
+        last = checkpoint.latest_step(checkpoint_dir)
+        if last:
+            like = {"x01": jax.ShapeDtypeStruct((last * q, d), jnp.float32),
+                    "y": jax.ShapeDtypeStruct((last * q,), jnp.float32),
+                    "round": jax.ShapeDtypeStruct((), jnp.int32)}
+            explorer.load_state_arrays(
+                checkpoint.restore(checkpoint_dir, last, like))
+            resumed = last
+            if record is not None:
+                for r in range(last):
+                    for s in range(q):
+                        record.tasks.append(TaskRecord(
+                            task=task.name, capsule=r * q + s,
+                            environment="checkpoint",
+                            inputs_digest="", started_s=0.0, wall_s=0.0,
+                            retries=0, cache_hit=True, mode="cache"))
+
+    attempts = 0
+    repriorities = 0
+    # a checkpoint may already hold MORE rounds than requested — the run
+    # then does no new work, but the result must stay self-consistent
+    # (rounds_done <= rounds_total, interrupted=False)
+    n_rounds = max(rounds, resumed)
+    stop_at = n_rounds if stop_after_rounds is None \
+        else min(n_rounds, stop_after_rounds)
+
+    def note(r, s, ctx, meta):
+        nonlocal attempts
+        attempts += len(meta.get("attempts") or ()) or 1
+        if record is not None:
+            record.tasks.append(TaskRecord(
+                task=task.name, capsule=r * q + s,
+                environment=(environment.name if environment is not None
+                             else "inline"),
+                inputs_digest=inputs_digest(task, ctx),
+                started_s=meta.get("t0", t0) - t0,
+                wall_s=meta.get("wall_s", 0.0),
+                retries=meta.get("retries", 0), cache_hit=False,
+                mode="surrogate",
+                # copy: a losing speculative attempt may append to the
+                # pool's live meta list after submit_traced returns
+                attempts=list(meta.get("attempts") or ()) or None))
+
+    for r in range(explorer.round, stop_at):
+        xq = explorer.ask()                       # (q, d), priority order
+        ctxs = [Context({"round": r, "slot": s,
+                         "x": tuple(float(v) for v in xq[s])})
+                for s in range(q)]
+        ys: List[Optional[float]] = [None] * q
+
+        if environment is None:
+            for s in range(q):
+                a_t0 = time.monotonic()
+                out = task.run(ctxs[s])
+                ys[s] = out["y"]
+                note(r, s, ctxs[s], {"t0": a_t0, "retries": 0,
+                                     "wall_s": time.monotonic() - a_t0})
+        else:
+            import concurrent.futures as cf
+            cap = max_inflight or max(
+                2, getattr(environment, "total_capacity", 2))
+            queue = list(range(q))               # priority-ordered slots
+            inflight: dict = {}
+            while queue or inflight:
+                while queue and len(inflight) < cap:
+                    s = queue.pop(0)
+                    inflight[environment.submit_async(task, ctxs[s])] = s
+                done_set, _ = cf.wait(
+                    list(inflight), return_when=cf.FIRST_COMPLETED)
+                for f in done_set:
+                    s = inflight.pop(f)
+                    out, meta = f.result()
+                    ys[s] = out["y"]
+                    note(r, s, ctxs[s], meta)
+                if queue and len(queue) > 1:
+                    # OSPREY-style: re-score the still-queued slots under
+                    # the posterior updated with this round's landed
+                    # results; dispatch order follows the new priorities.
+                    landed = [s for s in range(q) if ys[s] is not None]
+                    if landed:
+                        x01 = (xq - explorer._lo) / explorer._span
+                        scores = explorer.rescore(
+                            x01[landed], [ys[s] for s in landed],
+                            x01[queue])
+                        new = [queue[i] for i in
+                               np.argsort(-scores, kind="stable")]
+                        if new != queue:
+                            repriorities += 1
+                        queue = new
+        explorer.tell(xq, [float(v) for v in ys])
+        if checkpoint_dir is not None and (
+                explorer.round % checkpoint_every == 0
+                or explorer.round in (stop_at, n_rounds)):
+            checkpoint.save(checkpoint_dir, explorer.round,
+                            explorer.state_arrays(), blocking=True)
+            checkpoint.prune(checkpoint_dir, keep=2)
+        if progress:
+            progress(explorer.round, n_rounds)
+
+    wall = time.monotonic() - t0
+    if explorer.round < n_rounds:
+        return SurrogateResult(
+            genomes=None, objectives=None, best_genome=None,
+            best_objective=None, rounds_done=explorer.round,
+            rounds_total=n_rounds, resumed_rounds=resumed, interrupted=True,
+            attempts=attempts, repriorities=repriorities, wall_s=wall)
+    best_x, best_y = explorer.best
+    return SurrogateResult(
+        genomes=explorer._lo + explorer.x01 * explorer._span,
+        objectives=explorer.y.copy(), best_genome=best_x,
+        best_objective=best_y, rounds_done=explorer.round,
+        rounds_total=n_rounds, resumed_rounds=resumed, interrupted=False,
+        attempts=attempts, repriorities=repriorities, wall_s=wall)

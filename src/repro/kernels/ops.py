@@ -17,6 +17,8 @@ from repro.kernels.diffusion import diffuse_evaporate as _diffuse_pallas
 from repro.kernels.dominance import dominance_pass as _dom_pass_pallas
 from repro.kernels.dominance import dominated_counts as _dom_pallas
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.gp import gp_matrix as _gp_matrix_pallas
+from repro.kernels.gp import gp_sqdist as _gp_sqdist_pallas
 
 # Interpret-mode execution threshold: beyond this many grid steps the python
 # interpreter cost explodes, so non-TPU backends fall back to the reference.
@@ -136,6 +138,62 @@ def dominated_counts(objectives):
             and not _in_dryrun():
         return _dom_pallas(objectives, interpret=True)
     return ref.dominated_counts_ref(objectives)
+
+
+# --------------------------------------------------------------------------
+# GP covariance assembly (surrogate-assisted exploration)
+# --------------------------------------------------------------------------
+# Same routing discipline as dominance: the three paths (TPU kernel, CPU
+# interpret for small grids, jitted jnp expanded-form reference otherwise)
+# compute through the same ref.gp_sqdist_ref / ref.gp_kernel_fn helpers and
+# are bit-identical; the gate only decides who executes them. The reference
+# route is ALWAYS jitted: XLA's jit pipeline forms FMAs that op-by-op eager
+# execution does not, and the Pallas kernel (interpret or compiled) runs on
+# the jit side of that line — so "bit-exact" here means bit-exact among
+# jit-compiled executions, which is where every engine path runs.
+# Single-tile grids only: embedded in a jitted caller, a one-step interpret
+# kernel costs the same as the inlined reference, but the interpreter's
+# grid sequencing loses to the one-shot jnp assembly from ~4 steps up (and
+# an EAGER interpret call pays ~200 ms of per-call trace/lower overhead
+# regardless — eager callers always want the jitted reference route).
+_GP_INTERPRET_STEPS = 1
+
+_gp_sqdist_ref_jit = jax.jit(ref.gp_sqdist_ref)
+
+# kind/lengthscale/variance are static so both sides see literal constants
+# (a traced lengthscale could fold differently than the kernel's baked one);
+# distinct hyper-parameter values are drawn from small fixed grids, so the
+# compile-cache footprint stays bounded.
+_gp_matrix_ref_jit = jax.jit(
+    lambda x1, x2, kind, lengthscale, variance: ref.gp_matrix_ref(
+        x1, x2, kind=kind, lengthscale=lengthscale, variance=variance),
+    static_argnums=(2, 3, 4))
+
+
+def _gp_use_interpret(n1: int, n2: int, block: int = 256) -> bool:
+    steps = (-(-n1 // block)) * (-(-n2 // block))
+    return steps <= _GP_INTERPRET_STEPS and not _in_dryrun()
+
+
+def gp_sqdist(x1, x2):
+    """(N1, D) x (N2, D) -> (N1, N2) f32 squared distances (fused pass)."""
+    if on_tpu():
+        return _gp_sqdist_pallas(x1, x2, interpret=False)
+    if _gp_use_interpret(x1.shape[0], x2.shape[0]):
+        return _gp_sqdist_pallas(x1, x2, interpret=True)
+    return _gp_sqdist_ref_jit(x1, x2)
+
+
+def gp_matrix(x1, x2, *, kind="matern52", lengthscale=0.2, variance=1.0):
+    """Fused covariance assembly for fixed hyper-parameters."""
+    if on_tpu():
+        return _gp_matrix_pallas(x1, x2, kind=kind, lengthscale=lengthscale,
+                                 variance=variance, interpret=False)
+    if _gp_use_interpret(x1.shape[0], x2.shape[0]):
+        return _gp_matrix_pallas(x1, x2, kind=kind, lengthscale=lengthscale,
+                                 variance=variance, interpret=True)
+    return _gp_matrix_ref_jit(x1, x2, kind, float(lengthscale),
+                              float(variance))
 
 
 def dominance_pass(rows, cols=None, groups=None, groups_cols=None):

@@ -83,6 +83,60 @@ def dominance_pass_ref(rows, cols=None, groups=None, groups_cols=None):
     return counts, bitmap
 
 
+def gp_sqdist_ref(x1, x2):
+    """(N1, D), (N2, D) -> (N1, N2) f32 squared Euclidean distances via the
+    expanded form ||a||^2 + ||b||^2 - 2 a.b, clamped at 0 — THE formulation
+    of the fused GP covariance kernel; the Pallas tiles, this oracle, and
+    the surrogate posterior all assemble distances through this exact
+    sequence of ops, which is what makes them bit-identical.
+
+    The cross term is an explicit sum of products (not ``jnp.dot``): XLA
+    specializes dot-general FMA patterns per shape, so a tiled matmul is
+    NOT bitwise-stable against the full-matrix one, while an elementwise
+    multiply + trailing-axis reduce is. D is tiny (genome dims), so the
+    (tile, tile, D) product intermediate stays tile-local and small."""
+    n1 = (x1 * x1).sum(-1)
+    n2 = (x2 * x2).sum(-1)
+    cross = (x1[:, None, :] * x2[None, :, :]).sum(-1)
+    d2 = n1[:, None] + n2[None, :] - 2.0 * cross
+    return jnp.maximum(d2, 0.0)
+
+
+def gp_kernel_fn(kind, d2, lengthscale, variance):
+    """Map squared distances through a stationary covariance function.
+    Shared elementwise helper (same pack_words_u32 discipline): the Pallas
+    kernel body and every jnp path call this one function, so a fixed
+    (kind, lengthscale, variance) gives bitwise-identical covariances."""
+    if kind == "rbf":
+        return variance * jnp.exp(-0.5 * d2 / (lengthscale * lengthscale))
+    if kind == "matern52":
+        s5 = jnp.sqrt(jnp.float32(5.0))
+        # safe sqrt: identical forward values (sqrt(0) == 0), but the
+        # where() blocks the d/d(d2) = inf branch at d2 == 0 so the
+        # acquisition optimizer can differentiate through k(x, x) diagonals
+        d2p = jnp.maximum(d2, 0.0)
+        r = jnp.where(d2p > 0.0, jnp.sqrt(jnp.where(d2p > 0.0, d2p, 1.0)),
+                      0.0) / lengthscale
+        return variance * (1.0 + s5 * r + (5.0 / 3.0) * (r * r)) \
+            * jnp.exp(-s5 * r)
+    raise ValueError(f"unknown GP kernel kind: {kind}")
+
+
+def gp_matrix_ref(x1, x2, *, kind="matern52", lengthscale=0.2, variance=1.0):
+    """Oracle for the fused covariance assembly: expanded-form distances +
+    covariance map in one jnp expression (no (N1, N2, D) intermediate)."""
+    return gp_kernel_fn(kind, gp_sqdist_ref(x1, x2), lengthscale, variance)
+
+
+def gp_matrix_naive_ref(x1, x2, *, kind="matern52", lengthscale=0.2,
+                        variance=1.0):
+    """The textbook broadcast assembly: materializes the (N1, N2, D)
+    difference tensor. Numerically close to (but not bitwise equal with)
+    the expanded form — the benchmark baseline, not the exactness oracle."""
+    d2 = ((x1[:, None, :] - x2[None, :, :]) ** 2).sum(-1)
+    return gp_kernel_fn(kind, d2, lengthscale, variance)
+
+
 def nondominated_ranks_ref(objectives, valid=None):
     """Front-peeling reference for non-dominated sorting: a host-python loop
     that reruns the full O(N^2) pairwise pass once *per front* (the shape of

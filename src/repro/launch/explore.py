@@ -1,9 +1,12 @@
 """The paper-centric driver: calibrate the ants model with island-model
-NSGA-II, with archive checkpointing each epoch (fault tolerance) — §4 A-to-Z
-at production scale.
+NSGA-II (default) or the surrogate-assisted GP ask/tell engine, with
+checkpointing (fault tolerance) — §4 A-to-Z at production scale.
 
     PYTHONPATH=src python -m repro.launch.explore --islands 8 --epochs 5 \
         --reduced --out /tmp/ants_calibration
+
+    PYTHONPATH=src python -m repro.launch.explore --method surrogate \
+        --reduced --rounds 8 --out /tmp/ants_surrogate
 """
 from __future__ import annotations
 
@@ -25,7 +28,7 @@ from repro.core.cache import hash_value
 from repro.core.scheduler import RunRecord, TaskRecord, _utcnow
 from repro.evolution import (NSGA2Config, ga, init_island_state, make_epoch,
                              pareto_front, run_islands)
-from repro.explore import replicated_batch
+from repro.explore import SurrogateConfig, replicated_batch, run_surrogate
 from repro.launch.mesh import make_host_mesh
 from repro.runtime import sharding as shd
 
@@ -189,8 +192,81 @@ def calibrate(*, reduced: bool = True, n_islands: int = 8, mu: int = 16,
     return state, front
 
 
+def ants_scalar_eval(reduced: bool = True, replicates: int = 3,
+                     objective: int = 0):
+    """(keys (n,), genomes (n, 2)) -> (n,) scalar fitness for the
+    surrogate: the replicated-median time to deplete food source
+    ``objective`` (minimize). Source 0 (nearest) is the default: on the
+    reduced config it is the objective with real structure — the farther
+    sources mostly saturate at the tick horizon. ``objective=None``
+    averages all three."""
+    ants_cfg = REDUCED if reduced else CONFIG
+    batch = replicated_batch(
+        lambda keys, genomes: simulate_batch(ants_cfg, keys, genomes[:, 0],
+                                             genomes[:, 1]),
+        replicates)
+
+    def eval_fn(keys, genomes):
+        obj = batch(keys, genomes)
+        return obj.mean(axis=-1) if objective is None \
+            else obj[:, objective]
+
+    return eval_fn
+
+
+def calibrate_surrogate(*, reduced: bool = True, rounds: int = 8, q: int = 8,
+                        n_init: int = 16, replicates: int = 3,
+                        acquisition: str = "qei", fault_rate: float = 0.0,
+                        out_dir: str = "/tmp/ants_surrogate",
+                        printer=print):
+    """Surrogate-assisted calibration of the ants model: Sobol seeding,
+    then GP + q-EI rounds streamed through the fault-tolerant environment
+    pool, checkpointed per round (restart-safe), with the same WfCommons-
+    style provenance the other drivers emit."""
+    os.makedirs(out_dir, exist_ok=True)
+    cfg = SurrogateConfig(bounds=BOUNDS, q=q, n_init=n_init,
+                          acquisition=acquisition, seed=0)
+    eval_fn = ants_scalar_eval(reduced, replicates)
+    record = RunRecord(workflow="ants-surrogate", scheduler="ask-tell",
+                       environment="pool", started_at=_utcnow())
+    pool = make_init_pool(fault_rate)
+    t0 = time.time()
+    try:
+        res = run_surrogate(
+            cfg, eval_fn, rounds=rounds, environment=pool, record=record,
+            checkpoint_dir=os.path.join(out_dir, "surrogate_checkpoints"),
+            progress=lambda r, n: printer(f"[explore] round {r}/{n}"))
+    finally:
+        pool.shutdown()
+    dt = time.time() - t0
+    printer(f"[explore] surrogate: {len(res.objectives)} evaluations in "
+            f"{dt:.1f}s ({res.attempts} attempts, {res.repriorities} "
+            f"re-prioritizations, {res.resumed_rounds} rounds resumed); "
+            f"best {res.best_objective:.1f} at {res.best_genome}")
+    out = {
+        "best_genome": np.asarray(res.best_genome).tolist(),
+        "best_objective": res.best_objective,
+        "genomes": np.asarray(res.genomes).tolist(),
+        "objectives": np.asarray(res.objectives).tolist(),
+        "rounds": res.rounds_done,
+        "attempts": res.attempts,
+        "repriorities": res.repriorities,
+        "fault_rate": fault_rate,
+        "wall_s": dt,
+    }
+    with open(os.path.join(out_dir, "surrogate_result.json"), "w") as f:
+        json.dump(out, f, indent=2)
+    record.finalize(dt)
+    record.save(os.path.join(out_dir, "provenance.json"))
+    return res, out
+
+
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--method", choices=("islands", "surrogate"),
+                    default="islands",
+                    help="islands: fused island-model NSGA-II; surrogate: "
+                         "GP + q-EI ask/tell through the environment pool")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--islands", type=int, default=8)
     ap.add_argument("--mu", type=int, default=16)
@@ -213,8 +289,22 @@ def main():
     ap.add_argument("--fault-rate", type=float, default=0.0,
                     help="injected per-attempt job-failure rate for the "
                          "init pool (chaos mode; results stay bit-exact)")
+    ap.add_argument("--rounds", type=int, default=8,
+                    help="surrogate ask/tell rounds (of --q proposals each)")
+    ap.add_argument("--q", type=int, default=8,
+                    help="surrogate proposals per round (q-EI batch size)")
+    ap.add_argument("--n-init", type=int, default=16,
+                    help="Sobol space-filling evaluations seeding the GP")
+    ap.add_argument("--acquisition", choices=("qei", "qucb"), default="qei")
     ap.add_argument("--out", default="/tmp/ants")
     args = ap.parse_args()
+    if args.method == "surrogate":
+        calibrate_surrogate(reduced=args.reduced, rounds=args.rounds,
+                            q=args.q, n_init=args.n_init,
+                            replicates=args.replicates,
+                            acquisition=args.acquisition,
+                            fault_rate=args.fault_rate, out_dir=args.out)
+        return
     calibrate(reduced=args.reduced, n_islands=args.islands, mu=args.mu,
               lam=args.lam, steps_per_epoch=args.steps_per_epoch,
               epochs=args.epochs, replicates=args.replicates,

@@ -389,3 +389,98 @@ def test_streaming_init_seeds_ga_state():
     pop = {tuple(g) for g in np.asarray(res.genomes).round(6).tolist()}
     sel = {tuple(g) for g in np.asarray(state.genomes).round(6).tolist()}
     assert sel <= pop
+
+
+# ---------------------------------------------------------------------------
+# surrogate ask/tell loop: chaos + checkpoint/resume (ISSUE 5)
+# ---------------------------------------------------------------------------
+def _surrogate_setup():
+    # the shared tiny config/fitness (tests/conftest.py): equal configs
+    # hash alike, so the per-config jit cache is shared across the
+    # surrogate, chaos, and golden suites in one process
+    from conftest import surrogate_quadratic, surrogate_tiny_config
+    return surrogate_tiny_config(), surrogate_quadratic
+
+
+@pytest.mark.slow
+def test_surrogate_ask_tell_bit_exact_at_35pct_chaos():
+    """The adaptive loop through a 35%-fault pool (fail + hang + corrupt
+    members) must be bit-identical to the failure-free serial run: the
+    OSPREY-style re-prioritization may reorder dispatch, never results."""
+    from repro.explore.surrogate import run_surrogate
+    cfg, eval_fn = _surrogate_setup()
+    clean = run_surrogate(cfg, eval_fn, rounds=5)
+    pool = make_pool(
+        LocalEnvironment(name="fails", capacity=1,
+                         faults=FaultSpec(fail_rate=0.35, seed=1)),
+        LocalEnvironment(name="hangs", capacity=1, timeout_s=0.2,
+                         faults=FaultSpec(hang_rate=0.35, hang_s=3.0,
+                                          hang_limit=None, seed=2)),
+        LocalEnvironment(name="corrupts", capacity=1,
+                         faults=FaultSpec(corrupt_rate=0.35,
+                                          corrupt_limit=None, seed=3)),
+        retries=8)
+    chaos = run_surrogate(cfg, eval_fn, rounds=5, environment=pool,
+                          max_inflight=2)
+    pool.shutdown()
+    assert not chaos.interrupted
+    assert np.array_equal(clean.objectives, chaos.objectives)
+    assert np.array_equal(clean.genomes, chaos.genomes)
+    assert chaos.best_objective == clean.best_objective
+    # faults actually fired: more attempts than evaluations
+    assert chaos.attempts > 5 * cfg.q
+
+
+@pytest.mark.slow
+def test_surrogate_resumes_from_mid_run_checkpoint_under_chaos(tmp_path):
+    """Kill the loop mid-run, resume it on a 35%-fault pool: the resumed
+    trajectory must continue exactly where the straight run would be."""
+    from repro.core.scheduler import RunRecord, _utcnow
+    from repro.explore.surrogate import run_surrogate
+    cfg, eval_fn = _surrogate_setup()
+    ckpt = str(tmp_path / "surrogate")
+    straight = run_surrogate(cfg, eval_fn, rounds=5)
+    part = run_surrogate(cfg, eval_fn, rounds=5, checkpoint_dir=ckpt,
+                         stop_after_rounds=3)
+    assert part.interrupted and part.rounds_done == 3
+    pool = make_pool(
+        LocalEnvironment(name="flaky", capacity=2,
+                         faults=FaultSpec(fail_rate=0.35, seed=5)),
+        LocalEnvironment(name="stable", capacity=2),
+        retries=8)
+    rec = RunRecord(workflow="surrogate-resume", scheduler="ask-tell",
+                    environment="pool", started_at=_utcnow())
+    full = run_surrogate(cfg, eval_fn, rounds=5, environment=pool,
+                         checkpoint_dir=ckpt, record=rec)
+    pool.shutdown()
+    assert not full.interrupted and full.resumed_rounds == 3
+    assert np.array_equal(straight.objectives, full.objectives)
+    assert np.array_equal(straight.genomes, full.genomes)
+    # provenance: resumed rounds appear as cache hits, live ones as
+    # surrogate firings with per-attempt traces
+    modes = [t.mode for t in rec.tasks]
+    assert modes.count("cache") == 3 * cfg.q
+    assert modes.count("surrogate") == 2 * cfg.q
+    live = [t for t in rec.tasks if t.mode == "surrogate"]
+    assert all(t.attempts for t in live)
+
+
+@pytest.mark.slow
+def test_surrogate_reprioritizes_pending_candidates_under_chaos():
+    """With a dispatch window smaller than the batch, arrivals re-score the
+    queued candidates (OSPREY-style) — and that reordering must still never
+    change what gets evaluated."""
+    from repro.explore.surrogate import run_surrogate
+    cfg, eval_fn = _surrogate_setup()
+    clean = run_surrogate(cfg, eval_fn, rounds=5)
+    pool = make_pool(
+        LocalEnvironment(name="w0", capacity=1,
+                         faults=FaultSpec(fail_rate=0.35, seed=7)),
+        LocalEnvironment(name="w1", capacity=1,
+                         faults=FaultSpec(fail_rate=0.35, seed=8)),
+        retries=8)
+    chaos = run_surrogate(cfg, eval_fn, rounds=5, environment=pool,
+                          max_inflight=1)
+    pool.shutdown()
+    assert chaos.repriorities >= 1
+    assert np.array_equal(clean.objectives, chaos.objectives)

@@ -1,0 +1,199 @@
+"""Golden-run regression suite: pinned outputs of three end-to-end flows
+(ISSUE 5) so a future refactor cannot silently change results.
+
+Pinned flows:
+- ``listing3``: the paper's Listing-3 workflow (5-seed replication of the
+  ants model + median statistics) through the real DSL/scheduler;
+- ``island_epoch``: one island-GA epoch of the fused selection engine
+  (synthetic fitness — pins the NSGA-II/archive numerics, not the sim);
+- ``surrogate_iteration``: Sobol seeding + one GP/q-EI ask/tell round of
+  the surrogate engine.
+
+Two assertion tiers per flow, both against ``tests/golden.json``:
+- **digest tier**: the sha256 content digest of the exact output arrays
+  must match — asserted only when the recorded environment fingerprint
+  (jax version + backend) matches this host, because XLA's CPU codegen is
+  microarchitecture-dependent at the last bit;
+- **value tier**: outputs must match the stored values to atol=1e-3 —
+  asserted always; catches every semantic regression (seed handling,
+  selection order, acquisition changes) on any host.
+
+Regeneration (after an INTENDED behaviour change — review the value diff
+before committing!):
+
+    REPRO_REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest tests/test_golden.py -q
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden.json")
+REGEN = os.environ.get("REPRO_REGEN_GOLDEN", "") == "1"
+
+
+def _cpu_model() -> str:
+    try:
+        with open("/proc/cpuinfo") as f:
+            for line in f:
+                if line.startswith("model name"):
+                    return line.split(":", 1)[1].strip()
+    except OSError:
+        pass
+    import platform
+    return platform.processor() or platform.machine()
+
+
+def _env_fingerprint():
+    # the cpu model matters: XLA's CPU codegen specializes to the host
+    # microarchitecture, so last-bit floats (hence digests) are only
+    # comparable between hosts with the same (jax, backend, cpu) triple
+    return {"jax": jax.__version__, "backend": jax.default_backend(),
+            "cpu": _cpu_model()}
+
+
+def _digest(arrays: dict) -> str:
+    from repro.core.cache import hash_value
+    return hash_value({k: np.asarray(v) for k, v in sorted(arrays.items())})
+
+
+# ---------------------------------------------------------------------------
+# the three pinned flows (each returns {name: ndarray})
+# ---------------------------------------------------------------------------
+def _flow_listing3():
+    from repro.ants import simulate
+    from repro.configs.ants_netlogo import REDUCED
+    from repro.core import Capsule, PyTask, Val, aggregate, explore, puzzle
+    from repro.explore import SeedSampling, StatisticTask, median
+
+    seed = Val("seed", int)
+    food = [Val(f"food{i}", float) for i in (1, 2, 3)]
+    med = [Val(f"med{i}", float) for i in (1, 2, 3)]
+
+    def ants_fn(ctx):
+        obj = simulate(REDUCED, jax.random.key(int(ctx["seed"])), 50.0, 10.0)
+        return {f"food{i + 1}": float(obj[i]) for i in range(3)}
+
+    model = Capsule(PyTask("ants", ants_fn, inputs=(seed,),
+                           outputs=tuple(food)))
+    stat = Capsule(StatisticTask(
+        "stat", [(f, m, median) for f, m in zip(food, med)]))
+    head = Capsule(PyTask("head", lambda ctx: {}))
+    res = (puzzle(head) >> explore(SeedSampling(seed, 5, seed=1))
+           >> model >> aggregate() >> stat).run()
+    out = res[stat][0]
+    return {"medians": np.asarray([out[m.name] for m in med], np.float32)}
+
+
+def _flow_island_epoch():
+    from repro.evolution import NSGA2Config, init_island_state, make_epoch
+
+    cfg = NSGA2Config(mu=8, genome_dim=3, bounds=((0., 1.),) * 3,
+                      n_objectives=2)
+
+    def fitness(keys, genomes):
+        noise = jax.vmap(lambda k: jax.random.normal(k, (2,)))(keys)
+        f1 = genomes[:, 0]
+        g = 1.0 + 9.0 * genomes[:, 1:].mean(1)
+        return jnp.stack([f1, g * (1.0 - jnp.sqrt(f1 / g))], 1) \
+            + 0.01 * noise
+
+    epoch = jax.jit(make_epoch(cfg, fitness, lam=8, steps_per_epoch=2,
+                               merge_top_k=4))
+    state = init_island_state(cfg, jax.random.key(0), n_islands=2,
+                              archive_size=32)
+    state = epoch(state)
+    return {
+        "island_genomes": np.asarray(state.islands.genomes, np.float32),
+        "island_objectives": np.asarray(state.islands.objectives,
+                                        np.float32),
+        "archive_objectives": np.asarray(state.archive.objectives,
+                                         np.float32),
+        "evaluations": np.asarray(state.total_evaluations, np.int32),
+    }
+
+
+def _flow_surrogate_iteration():
+    from conftest import surrogate_quadratic, surrogate_tiny_config
+    from repro.explore.surrogate import run_surrogate
+
+    res = run_surrogate(surrogate_tiny_config(), surrogate_quadratic,
+                        rounds=3)                 # 2 sobol + 1 GP round
+    return {"genomes": np.asarray(res.genomes, np.float32),
+            "objectives": np.asarray(res.objectives, np.float32)}
+
+
+FLOWS = {
+    "listing3": _flow_listing3,
+    "island_epoch": _flow_island_epoch,
+    "surrogate_iteration": _flow_surrogate_iteration,
+}
+
+
+# ---------------------------------------------------------------------------
+# regeneration + assertions
+# ---------------------------------------------------------------------------
+def _load():
+    if not os.path.exists(GOLDEN_PATH):
+        pytest.fail(f"{GOLDEN_PATH} missing — regenerate with "
+                    f"REPRO_REGEN_GOLDEN=1 (see module docstring)")
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+def _regen_entry(arrays):
+    return {"digest": _digest(arrays),
+            "values": {k: np.asarray(v).tolist()
+                       for k, v in sorted(arrays.items())}}
+
+
+@pytest.fixture(scope="module")
+def golden():
+    if REGEN:
+        data = {"env": _env_fingerprint(),
+                "cases": {name: _regen_entry(flow())
+                          for name, flow in FLOWS.items()}}
+        with open(GOLDEN_PATH, "w") as f:
+            json.dump(data, f, indent=1, sort_keys=True)
+            f.write("\n")
+        pytest.skip(f"regenerated {GOLDEN_PATH}; rerun without "
+                    "REPRO_REGEN_GOLDEN to assert")
+    return _load()
+
+
+def _check(golden, name, arrays):
+    case = golden["cases"][name]
+    # value tier: any-host semantic pin
+    got = {k: np.asarray(v) for k, v in arrays.items()}
+    want = {k: np.asarray(v, got[k].dtype)
+            for k, v in case["values"].items()}
+    assert set(got) == set(want)
+    for k in got:
+        np.testing.assert_allclose(
+            got[k].astype(np.float64), want[k].astype(np.float64),
+            atol=1e-3, rtol=1e-5,
+            err_msg=f"golden value drift in {name}/{k} — if intended, "
+                    f"regenerate (REPRO_REGEN_GOLDEN=1) and review the diff")
+    # digest tier: bit-level pin, same-environment hosts only
+    if golden["env"] == _env_fingerprint():
+        assert _digest(arrays) == case["digest"], (
+            f"golden digest drift in {name}: outputs changed at the bit "
+            f"level on the pinned environment {golden['env']}")
+
+
+@pytest.mark.slow
+def test_golden_listing3_workflow(golden):
+    _check(golden, "listing3", _flow_listing3())
+
+
+@pytest.mark.slow
+def test_golden_island_ga_epoch(golden):
+    _check(golden, "island_epoch", _flow_island_epoch())
+
+
+@pytest.mark.slow
+def test_golden_surrogate_iteration(golden):
+    _check(golden, "surrogate_iteration", _flow_surrogate_iteration())
