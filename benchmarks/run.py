@@ -24,6 +24,10 @@ Paper claims covered:
                         fault-tolerant EnvironmentPool — throughput and
                         makespan failure-free vs >=30% injected failures
                         (bit-exact), plus mid-population kill+resume
+  service_two_tenant    the always-on delegation layer: two concurrent
+                        experiments through ONE shared pool via the
+                        persistent priority task queue, bit-exact vs their
+                        serial one-pool-each references
   gp_covariance         surrogate engine hot spot: fused one-pass GP
                         covariance assembly (engine route of the Pallas
                         kernel) vs the naive broadcast jnp reference that
@@ -223,9 +227,8 @@ def bench_egi_200k_init(reduced=False):
     import shutil
     import tempfile
 
-    from repro.core import FaultSpec, LocalEnvironment
-    from repro.core.envpool import EnvironmentPool
     from repro.evolution import NSGA2Config, ga
+    from repro.launch.explore import make_init_pool
 
     n, chunk = (4096, 512) if reduced else (200_000, 4096)
     cfg = NSGA2Config(mu=16, genome_dim=2, bounds=((0., 100.), (0., 100.)),
@@ -237,15 +240,13 @@ def bench_egi_200k_init(reduced=False):
         return jnp.stack([(d - 30.) ** 2 + (e - 10.) ** 2,
                           jnp.abs(d - e), d + e], 1) + 0.1 * noise
 
-    def make_pool(rate):
-        envs = [LocalEnvironment(
-            name=f"worker{i}", capacity=2,
-            faults=FaultSpec(fail_rate=rate, seed=i) if rate else None)
-            for i in range(3)]
-        return EnvironmentPool(envs, retries=8, backoff_s=0.01)
-
     def run(rate, **kw):
-        pool = make_pool(rate)
+        # chaos legs get extra pool rounds: at a 35% per-attempt fail rate
+        # and ~50 chunk jobs, 9 rounds leave a per-run chance of some job
+        # exhausting the pool (member pick order is timing-dependent);
+        # 13 rounds make exhaustion statistically impossible (~1e-4)
+        pool = make_init_pool(rate, backoff_s=0.01,
+                              retries=12 if rate else 8)
         try:
             return ga.evaluate_population_streaming(
                 cfg, eval_fn, 0, n_total=n, chunk=chunk, environment=pool,
@@ -280,6 +281,72 @@ def bench_egi_200k_init(reduced=False):
     row("egi_200k_init_resume", full.wall_s * 1e6,
         f"resumed_{full.resumed_chunks}_of_{full.chunks_total}_chunks_"
         f"bit_exact_{resume_exact}")
+
+
+def bench_service_two_tenant(reduced=False):
+    """The always-on service (ROADMAP open item 1): TWO experiments share
+    ONE pool through the persistent priority queue, vs the same two
+    experiments run back-to-back one-pool-each. Both tenants are asserted
+    bit-exact against their serial references (pure tasks: the dispatch
+    interleave never changes values); the row reports the multi-tenant
+    throughput and the makespan ratio vs serial."""
+    import threading
+
+    from repro.core import ExplorationService
+    from repro.evolution import NSGA2Config, ga
+    from repro.launch.explore import make_init_pool
+
+    n, chunk = (1024, 128) if reduced else (16384, 512)
+    cfg = NSGA2Config(mu=16, genome_dim=2, bounds=((0., 100.), (0., 100.)),
+                      n_objectives=3)
+
+    def eval_fn(keys, genomes):
+        noise = jax.vmap(lambda k: jax.random.normal(k, (3,)))(keys)
+        d, e = genomes[:, 0], genomes[:, 1]
+        return jnp.stack([(d - 30.) ** 2 + (e - 10.) ** 2,
+                          jnp.abs(d - e), d + e], 1) + 0.1 * noise
+
+    def serial(seed):
+        pool = make_init_pool(backoff_s=0.01)
+        try:
+            return ga.evaluate_population_streaming(
+                cfg, eval_fn, seed, n_total=n, chunk=chunk, environment=pool)
+        finally:
+            pool.shutdown()
+
+    serial(0)                       # warm the jit cache outside both timings
+    t0 = time.perf_counter()
+    refs = [serial(0), serial(1)]
+    t_serial = time.perf_counter() - t0
+
+    pool = make_init_pool(backoff_s=0.01)
+    service = ExplorationService(pool)
+    results = [None, None]
+
+    def tenant(slot, seed):
+        results[slot] = ga.evaluate_population_streaming(
+            cfg, eval_fn, seed, n_total=n, chunk=chunk, service=service,
+            experiment_id=f"tenant{seed}")
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=tenant, args=(s, s)) for s in (0, 1)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    t_service = time.perf_counter() - t0
+    service.shutdown()
+    pool.shutdown()
+
+    bit_exact = all(
+        np.array_equal(refs[s].objectives, results[s].objectives)
+        for s in (0, 1))
+    assert bit_exact, "service tenants diverged from serial references"
+    jobs = refs[0].chunks_total + refs[1].chunks_total
+    row("service_two_tenant_throughput", t_service * 1e6,
+        f"{2 * n / t_service:.0f}_evals_per_s_2_tenants_{jobs}_jobs_"
+        f"one_pool_speedup_{t_serial / t_service:.2f}x_vs_serial_"
+        f"bit_exact_{bit_exact}")
 
 
 def bench_gp_covariance(reduced=False):
@@ -428,6 +495,7 @@ BENCHES = [
     bench_workflow_submit,
     bench_replication_median,
     bench_egi_200k_init,
+    bench_service_two_tenant,
     bench_gp_covariance,
     bench_surrogate_ants,
     bench_lm_train_step,

@@ -15,4 +15,6 @@ from repro.core.faults import (FaultSpec, InjectedFailure,         # noqa
 from repro.core.cache import (TaskCache, DEFAULT_CACHE,            # noqa
                               fingerprint_task, inputs_digest)
 from repro.core.scheduler import RunRecord, TaskRecord             # noqa
+from repro.core.taskqueue import TaskQueue, QueueEntry             # noqa
+from repro.core.service import ExplorationService                  # noqa
 from repro.core.dsl import Puzzle, puzzle, explore, aggregate      # noqa

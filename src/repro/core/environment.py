@@ -92,6 +92,11 @@ class Environment:
         # Injected hangs sleep on this event so pool shutdown (or test
         # teardown) can wake stragglers instead of wedging on them.
         self._wake = threading.Event()
+        # Per-attempt wake events of timeout-bounded attempts currently in
+        # flight: an abandoned (timed-out) attempt is woken individually so
+        # it cannot pin its _attempt_pool slot for the injected hang's full
+        # duration. release_hangs() sets these too.
+        self._attempt_wakes: set = set()
 
     # -- single task ---------------------------------------------------------
     def submit(self, task: Task, context: Context) -> Context:
@@ -131,7 +136,12 @@ class Environment:
         with self._lock:
             self.stats.completed += 1
         meta["wall_s"] = time.monotonic() - meta["t0"]
-        return out, meta
+        # Hand out a COPY: losing speculative attempts may still be running
+        # and will append to the internal attempts list after we return —
+        # they must not mutate meta already aliased into TaskRecords.
+        out_meta = dict(meta)
+        out_meta["attempts"] = [dict(a) for a in list(meta["attempts"])]
+        return out, out_meta
 
     def submit_async(self, task: Task, context: Context) -> "cf.Future":
         """Submit one task to the environment's thread pool.
@@ -158,7 +168,8 @@ class Environment:
         return f"{task.name}:{inputs_digest(task, context)}"
 
     def run_attempt(self, task: Task, context: Context, *, attempt: int = 0,
-                    job: Optional[str] = None
+                    job: Optional[str] = None,
+                    wake: Optional[threading.Event] = None
                     ) -> Tuple[Context, Optional[str]]:
         """Execute ONE attempt of a task on this environment.
 
@@ -168,6 +179,12 @@ class Environment:
         (interruptibly) before completing, injected corruption perturbs the
         output *after* the source-side fingerprint was taken.
 
+        Args:
+            wake: optional per-attempt event that interrupts this attempt's
+                sleeps (in addition to the environment-wide ``_wake``);
+                :meth:`attempt_once` sets it when it abandons the attempt
+                at timeout so the executor slot drains promptly.
+
         Returns:
             ``(output, fingerprint)`` — fingerprint is the sha256 of the
             output as computed at the source, or None when no faults are
@@ -175,21 +192,22 @@ class Environment:
             corruption by recomputing the fingerprint on receipt
             (:meth:`verify_result`).
         """
+        w = wake if wake is not None else self._wake
         if self.latency_s:
-            interruptible_sleep(self.latency_s, self._wake)
+            interruptible_sleep(self.latency_s, w)
         f = self.faults
         decision = "ok"
         if f is not None:
             job = job or self._job_key(task, context)
             decision = f.decide(job, attempt)
             if f.latency_s:
-                interruptible_sleep(f.latency_s, self._wake)
+                interruptible_sleep(f.latency_s, w)
         if decision == "fail":
             raise InjectedFailure(
                 f"injected failure: {task.name} attempt {attempt} "
                 f"on {self.name}")
         if decision == "hang":
-            interruptible_sleep(f.hang_s, self._wake)
+            interruptible_sleep(f.hang_s, w)
         out = task.run(context)
         if f is None:
             return out, None
@@ -216,6 +234,10 @@ class Environment:
         their abandoned futures."""
         self._wake.set()
         self._wake = threading.Event()
+        with self._lock:
+            wakes = list(self._attempt_wakes)
+        for w in wakes:                    # timeout-bounded attempts sleep
+            w.set()                        # on their own per-attempt event
 
     def attempt_once(self, task: Task, context: Context, *, attempt: int = 0,
                      job: Optional[str] = None) -> Context:
@@ -237,18 +259,40 @@ class Environment:
                         self._attempt_pool = cf.ThreadPoolExecutor(
                             max_workers=max(self.capacity, 2),
                             thread_name_prefix=f"repro-att-{self.name}")
-                fut = self._attempt_pool.submit(
-                    self.run_attempt, task, context,
-                    attempt=attempt, job=job)
+                begun = threading.Event()
+                wake = threading.Event()
+                with self._lock:
+                    self._attempt_wakes.add(wake)
+
+                def _attempt():
+                    begun.set()
+                    return self.run_attempt(task, context, attempt=attempt,
+                                            job=job, wake=wake)
+
+                fut = self._attempt_pool.submit(_attempt)
                 try:
+                    # The timeout budget opens when the attempt BEGINS
+                    # executing — time spent queued behind a saturated
+                    # _attempt_pool does not count against it.
+                    while not begun.wait(timeout=0.02):
+                        if fut.done():
+                            break          # raced a cancel/error: surface it
                     out, digest = fut.result(timeout=self.timeout_s)
                 except cf.TimeoutError:
+                    # Abandon the attempt AND drain its executor slot: the
+                    # per-attempt wake interrupts its (injected-hang or
+                    # latency) sleeps so the worker returns promptly and the
+                    # fixed-width pool is not pinned by abandoned attempts.
+                    wake.set()
                     fut.cancel()           # late result discarded
                     with self._lock:
                         self.stats.hung += 1
                     raise TimeoutError(
                         f"task {task.name} attempt {attempt} exceeded "
                         f"{self.timeout_s}s on {self.name}") from None
+                finally:
+                    with self._lock:
+                        self._attempt_wakes.discard(wake)
             else:
                 out, digest = self.run_attempt(task, context,
                                                attempt=attempt, job=job)

@@ -50,9 +50,19 @@ from repro.core.task import Task, TaskError
 @dataclasses.dataclass
 class PoolStats:
     """Aggregate fault-tolerance counters (per-member stats live on each
-    member's own ``EnvStats``)."""
+    member's own ``EnvStats``).
+
+    Every mutation goes through :meth:`inc` under ONE internal lock —
+    previously ``map_explore`` updated counters under its rendezvous
+    condition while ``submit_traced`` used the pool lock, so concurrent
+    paths could lose increments. The invariant a consistent snapshot obeys:
+
+        submitted == completed + failed + in_flight
+    """
     submitted: int = 0
-    completed: int = 0
+    completed: int = 0            # jobs that returned a verified result
+    failed: int = 0               # jobs that exhausted every pool round
+    in_flight: int = 0            # jobs currently inside the pool
     resubmissions: int = 0        # cross-member retries consumed
     speculative_wins: int = 0     # duplicate dispatches whose copy won
     speculative_losses: int = 0   # duplicates whose result was discarded
@@ -60,6 +70,22 @@ class PoolStats:
     failed_attempts: int = 0
     hung_attempts: int = 0
     corrupt_attempts: int = 0
+
+    def __post_init__(self):
+        # not a dataclass field: asdict()/repr()/eq() see counters only
+        self._lock = threading.Lock()
+
+    def inc(self, **deltas: int) -> None:
+        """Atomically apply counter deltas (the single mutation path)."""
+        with self._lock:
+            for name, delta in deltas.items():
+                setattr(self, name, getattr(self, name) + delta)
+
+    def snapshot(self) -> Dict[str, int]:
+        """Consistent point-in-time copy of all counters."""
+        with self._lock:
+            return {f.name: getattr(self, f.name)
+                    for f in dataclasses.fields(self)}
 
 
 class _Member:
@@ -75,7 +101,6 @@ class _Member:
         self.inflight = 0
         self.completed = 0
         self.busy_s = 0.0           # cumulative attempt wall time
-        self.deque: collections.deque = collections.deque()  # map_explore
 
     def drain_rate(self) -> float:
         """Completed attempts per busy-second — the balancer's notion of
@@ -163,13 +188,17 @@ class EnvironmentPool:
                       ) -> Tuple[Context, Dict[str, Any]]:
         """Run one job with cross-member resubmission (and optional
         speculative duplicate dispatch). Returns ``(output, meta)`` with
-        per-attempt records in ``meta["attempts"]``."""
+        per-attempt records in ``meta["attempts"]``.
+
+        The returned ``meta`` is a private copy: a losing speculative
+        duplicate that lands AFTER the winner returned appends only to the
+        pool's internal attempt trace, never to the meta already handed to
+        the caller (TaskRecords built from it must stay immutable)."""
         meta: Dict[str, Any] = {"retries": 0,
                                 "speculative": self.speculative > 1,
                                 "t0": time.monotonic(), "wall_s": 0.0,
                                 "attempts": []}
-        with self._lock:
-            self.stats.submitted += 1
+        self.stats.inc(submitted=1, in_flight=1)
         exclude: set = set()
         err: Optional[BaseException] = None
         for round_i in range(self.retries + 1):
@@ -177,11 +206,11 @@ class EnvironmentPool:
             picked = self._pick(frozenset(exclude), k=k)
             try:
                 out = self._race(task, context, picked, round_i, meta)
-                with self._lock:
-                    self.stats.completed += 1
+                self.stats.inc(completed=1, in_flight=-1)
                 meta["wall_s"] = time.monotonic() - meta["t0"]
-                return out, meta
+                return out, self._meta_copy(meta)
             except TaskError:
+                self.stats.inc(failed=1, in_flight=-1)
                 raise                    # declaration bugs never resubmit
             except Exception as e:
                 err = e
@@ -189,12 +218,21 @@ class EnvironmentPool:
                 if len(exclude) >= len(self.members):
                     exclude.clear()      # everyone failed once: forgive
                 meta["retries"] += 1
-                with self._lock:
-                    self.stats.resubmissions += 1
+                self.stats.inc(resubmissions=1)
                 interruptible_sleep(self.backoff_s * (2 ** round_i), None)
+        self.stats.inc(failed=1, in_flight=-1)
         raise RuntimeError(
             f"job {task.name} failed after {self.retries + 1} pool rounds "
             f"across {len(self.members)} environments") from err
+
+    def _meta_copy(self, meta: Dict[str, Any]) -> Dict[str, Any]:
+        """Snapshot a live meta dict: racing speculative losers append to
+        the internal attempts list under ``self._lock``, so the handed-out
+        copy is taken under the same lock."""
+        with self._lock:
+            out = dict(meta)
+            out["attempts"] = [dict(a) for a in meta["attempts"]]
+        return out
 
     def _race(self, task: Task, context: Context, picked: List[_Member],
               round_i: int, meta: Dict[str, Any]) -> Context:
@@ -215,15 +253,13 @@ class EnvironmentPool:
             except Exception as e:
                 err = e
                 continue
-            with self._lock:
-                self.stats.speculative_wins += 1
+            self.stats.inc(speculative_wins=1)
 
             def _discard(other):
                 if not other.cancel():
                     def note_loss(fut):
                         if fut.exception() is None:
-                            with self._lock:
-                                self.stats.speculative_losses += 1
+                            self.stats.inc(speculative_losses=1)
                     other.add_done_callback(note_loss)
 
             for other in futures:
@@ -255,9 +291,7 @@ class EnvironmentPool:
             err = e
             counter = {"hang": "hung_attempts", "corrupt": "corrupt_attempts",
                        "fail": "failed_attempts"}[m.env.attempt_outcome(e)]
-            with self._lock:
-                setattr(self.stats, counter,
-                        getattr(self.stats, counter) + 1)
+            self.stats.inc(**{counter: 1})
             raise
         finally:
             wall = time.monotonic() - a_t0
@@ -297,6 +331,13 @@ class EnvironmentPool:
         assembled by lane index, so the output order — and, tasks being
         pure, the output *values* — are independent of the dispatch
         schedule: bit-exact vs. any single member and vs. the serial path.
+
+        Reentrant: ALL lane state (deques included) is local to this call,
+        so any number of concurrent ``map_explore`` fan-outs may share one
+        pool — they contend only for member capacity, never for each
+        other's lanes. (Previously the deques lived on the members and were
+        cleared per call: two concurrent fan-outs could drop each other's
+        lanes — a permanent hang — or cross-index them.)
         """
         contexts = list(contexts)
         if not contexts:
@@ -314,15 +355,19 @@ class EnvironmentPool:
         lane_banned: List[set] = [set() for _ in range(n_lanes)]
         lane_err: List[Optional[BaseException]] = [None] * n_lanes
         done = [0]
+        ctx_done = [0]
         fatal: List[BaseException] = []
         cond = threading.Condition()
+        self.stats.inc(submitted=n, in_flight=n)
 
-        for m in self.members:
-            m.deque.clear()
+        # per-CALL deques: this fan-out's lanes are invisible to any other
+        # concurrent fan-out sharing the pool
+        deques: Dict[_Member, collections.deque] = \
+            {m: collections.deque() for m in self.members}
         # deal proportionally to capacity, round-robin over slots
         slots = [m for m in self.members for _ in range(m.capacity)]
         for i, lane in enumerate(lanes):
-            slots[i % len(slots)].deque.append(lane)
+            deques[slots[i % len(slots)]].append(lane)
 
         def run_lane(m: _Member, lane, stolen: bool, speculated: bool):
             idx, ctxs = lane
@@ -360,12 +405,15 @@ class EnvironmentPool:
                     if results[idx] is None:
                         results[idx] = outs
                         done[0] += 1
+                        ctx_done[0] += len(outs)
+                        self.stats.inc(completed=len(outs),
+                                       in_flight=-len(outs))
                         if speculated:
-                            self.stats.speculative_wins += 1
+                            self.stats.inc(speculative_wins=1)
                         if stolen:
-                            self.stats.lanes_stolen += 1
+                            self.stats.inc(lanes_stolen=1)
                     elif speculated:
-                        self.stats.speculative_losses += 1
+                        self.stats.inc(speculative_losses=1)
                 else:
                     lane_attempts[idx] += 1
                     # deprioritize the member that just failed this lane
@@ -378,13 +426,14 @@ class EnvironmentPool:
                             f"{lane_attempts[idx]} attempts: {lane_err[idx]}"))
                     elif results[idx] is None:
                         # requeue on the least-loaded non-banned member
-                        self.stats.resubmissions += 1
+                        self.stats.inc(resubmissions=1)
                         cands = [o for o in self.members
                                  if o.name not in lane_banned[idx]] \
                             or [o for o in self.members if o is not m] or [m]
                         target = min(
-                            cands, key=lambda o: len(o.deque) + o.inflight)
-                        target.deque.append(lanes[idx])
+                            cands,
+                            key=lambda o: len(deques[o]) + o.inflight)
+                        deques[target].append(lanes[idx])
                 cond.notify_all()
 
         def worker(m: _Member):
@@ -394,20 +443,20 @@ class EnvironmentPool:
                 with cond:
                     if fatal or done[0] == n_lanes:
                         return
-                    if m.deque:
-                        lane = m.deque.popleft()
+                    if deques[m]:
+                        lane = deques[m].popleft()
                     else:
                         victim = max((o for o in self.members
                                       if o is not m and any(
                                           m.name not in lane_banned[ln[0]]
-                                          for ln in o.deque)),
-                                     key=lambda o: len(o.deque),
+                                          for ln in deques[o])),
+                                     key=lambda o: len(deques[o]),
                                      default=None)
                         if victim is not None:
                             # steal the newest lane this member may run
-                            for ln in reversed(victim.deque):
+                            for ln in reversed(deques[victim]):
                                 if m.name not in lane_banned[ln[0]]:
-                                    victim.deque.remove(ln)
+                                    deques[victim].remove(ln)
                                     lane = ln
                                     stolen = True
                                     break
@@ -434,8 +483,9 @@ class EnvironmentPool:
                         cands = [o for o in self.members
                                  if o.name not in lane_banned[lane[0]]]
                         target = min(
-                            cands, key=lambda o: len(o.deque) + o.inflight)
-                        target.deque.append(lane)
+                            cands,
+                            key=lambda o: len(deques[o]) + o.inflight)
+                        deques[target].append(lane)
                         cond.notify_all()
                         continue
                     lane_running[lane[0]] += 1
@@ -453,13 +503,14 @@ class EnvironmentPool:
         for m in self.members:              # wake injected-hang stragglers
             m.env.release_hangs()
         if fatal:
+            # contexts never completed are no longer in flight: failed
+            left = n - ctx_done[0]
+            if left:
+                self.stats.inc(failed=left, in_flight=-left)
             raise fatal[0]
         out: List[Context] = []
         for r in results:
             out.extend(r)                   # type: ignore[arg-type]
-        with self._lock:
-            self.stats.submitted += n
-            self.stats.completed += n
         return out
 
     # ----------------------------------------------------------- environment

@@ -170,7 +170,7 @@ def _fire_capsule(capsule, contexts, cenv, cache: Optional[TaskCache],
                     inputs_digest=digest, cache_key=key,
                     started_s=meta["t0"] - run_t0, wall_s=meta["wall_s"],
                     retries=meta["retries"], cache_hit=False, mode="submit",
-                    attempts=meta.get("attempts") or None)
+                    attempts=list(meta.get("attempts") or ()) or None)
         if cache is not None:
             for i, _digest, key in misses:
                 cache.put(key, outs[i])

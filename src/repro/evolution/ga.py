@@ -167,10 +167,12 @@ def evaluate_population_streaming(
         cfg: NSGA2Config, eval_fn: Callable, seed: int, *, n_total: int,
         chunk: int = 4096, environment=None, checkpoint_dir: str = None,
         checkpoint_every: int = 8, stop_after_chunks: Optional[int] = None,
-        record=None, progress: Callable[[int, int], None] = None
+        record=None, progress: Callable[[int, int], None] = None,
+        service=None, experiment_id: str = "ga-init"
         ) -> StreamingResult:
     """Evaluate an ``n_total``-individual initial population in streaming
-    chunks, optionally through a (fault-injected) environment or pool.
+    chunks, optionally through a (fault-injected) environment or pool —
+    or as one tenant of a shared ExplorationService.
 
     Args:
         cfg: GA configuration (bounds/dims/objectives).
@@ -180,6 +182,11 @@ def evaluate_population_streaming(
         chunk: individuals per job (one device program per job).
         environment: Environment or EnvironmentPool; None = serial
             reference loop (bit-exact baseline).
+        service: ExplorationService to delegate chunks to (mutually
+            exclusive with ``environment``) — the GA then shares the
+            service's pool with concurrent tenants, and completed chunks
+            are memoized across driver restarts by the service cache.
+        experiment_id: this run's tenant id on the service.
         checkpoint_dir: when given, the contiguous completed prefix is
             committed there every ``checkpoint_every`` chunks and the run
             resumes from the newest commit.
@@ -195,6 +202,8 @@ def evaluate_population_streaming(
     from repro.core.prototype import Context
     from repro.core.scheduler import TaskRecord
 
+    if service is not None and environment is not None:
+        raise ValueError("pass either environment= or service=, not both")
     t0 = time.monotonic()
     sizes = chunk_sizes(n_total, chunk)
     n_chunks = len(sizes)
@@ -258,15 +267,34 @@ def evaluate_population_streaming(
             record.tasks.append(TaskRecord(
                 task=task.name, capsule=i,
                 environment=(environment.name if environment is not None
-                             else "inline"),
+                             else getattr(service, "name", None)
+                             or "inline"),
                 inputs_digest=inputs_digest(
                     task, Context(chunk=i, size=sizes[i])),
                 started_s=meta["t0"] - t0 if "t0" in meta else 0.0,
                 wall_s=meta.get("wall_s", 0.0),
                 retries=meta.get("retries", 0), cache_hit=False,
-                mode="stream", attempts=meta.get("attempts") or None))
+                mode="stream",
+                attempts=list(meta.get("attempts") or ()) or None))
 
-    if environment is None:
+    if service is not None:
+        if todo:
+            tids = service.submit_tasks(
+                experiment_id,
+                [(task, Context(chunk=i, size=sizes[i])) for i in todo])
+            tid_to_i = dict(zip(tids, todo))
+            n_done = 0
+            for tid, out in service.as_completed(experiment_id, tids):
+                i = tid_to_i[tid]
+                if out is None:
+                    service.result(experiment_id, tid)  # raises the error
+                done[i] = out["objectives"]
+                note(i, {"retries": 0, "wall_s": 0.0})
+                n_done += 1
+                commit()
+                if progress:
+                    progress(resumed + n_done, n_chunks)
+    elif environment is None:
         for n_done, i in enumerate(todo):
             a_t0 = time.monotonic()
             out = task.run(Context(chunk=i, size=sizes[i]))

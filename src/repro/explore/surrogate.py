@@ -447,11 +447,13 @@ def run_surrogate(cfg: SurrogateConfig, eval_fn: Callable, *,
                   rounds: int, environment=None, max_inflight: int = None,
                   checkpoint_dir: str = None, checkpoint_every: int = 1,
                   stop_after_rounds: Optional[int] = None, record=None,
-                  progress: Callable[[int, int], None] = None
+                  progress: Callable[[int, int], None] = None,
+                  service=None, experiment_id: str = "surrogate"
                   ) -> SurrogateResult:
     """Drive the ask/tell loop for ``rounds`` rounds of ``cfg.q``
     evaluations each, optionally through a (fault-injected) Environment or
-    EnvironmentPool.
+    EnvironmentPool — or as one tenant of a shared
+    :class:`~repro.core.service.ExplorationService`.
 
     Each round: ``ask()`` fixes the batch; jobs stream through
     ``submit_async`` up to ``max_inflight`` at a time, highest acquisition
@@ -462,8 +464,16 @@ def run_surrogate(cfg: SurrogateConfig, eval_fn: Callable, *,
     resumes from the newest commit; ``stop_after_rounds`` is the mid-run
     kill switch the resume tests/benches drive.
 
+    With ``service=`` (mutually exclusive with ``environment=``), each
+    slot is submitted under its ask-order priority and the re-score is
+    routed through ``service.update_priorities`` — reprioritization
+    becomes a queue primitive instead of a local dispatch-list shuffle,
+    and the surrogate shares the service's pool with other tenants.
+
     ``eval_fn(keys (n,), genomes (n, d)) -> (n,) scalars`` (minimized).
     """
+    if service is not None and environment is not None:
+        raise ValueError("pass either environment= or service=, not both")
     from repro import checkpoint
     from repro.core.cache import inputs_digest
     from repro.core.prototype import Context
@@ -503,14 +513,16 @@ def run_surrogate(cfg: SurrogateConfig, eval_fn: Callable, *,
     stop_at = n_rounds if stop_after_rounds is None \
         else min(n_rounds, stop_after_rounds)
 
+    env_name = (environment.name if environment is not None
+                else getattr(service, "name", None) or "inline")
+
     def note(r, s, ctx, meta):
         nonlocal attempts
         attempts += len(meta.get("attempts") or ()) or 1
         if record is not None:
             record.tasks.append(TaskRecord(
                 task=task.name, capsule=r * q + s,
-                environment=(environment.name if environment is not None
-                             else "inline"),
+                environment=env_name,
                 inputs_digest=inputs_digest(task, ctx),
                 started_s=meta.get("t0", t0) - t0,
                 wall_s=meta.get("wall_s", 0.0),
@@ -527,7 +539,40 @@ def run_surrogate(cfg: SurrogateConfig, eval_fn: Callable, *,
                 for s in range(q)]
         ys: List[Optional[float]] = [None] * q
 
-        if environment is None:
+        if service is not None:
+            # one tenant of a shared service: slots carry their ask-order
+            # priority into the queue (slot 0 scored best by the
+            # acquisition), and the OSPREY re-score below runs through
+            # update_priorities — the queue primitive, not a local list.
+            tid_by_slot: dict = {}
+            for s in range(q):
+                [tid] = service.submit_tasks(
+                    experiment_id, [(task, ctxs[s])], priority=float(q - s))
+                tid_by_slot[s] = tid
+            slot_by_tid = {tid: s for s, tid in tid_by_slot.items()}
+            for tid, out in service.as_completed(
+                    experiment_id, list(tid_by_slot.values())):
+                s = slot_by_tid[tid]
+                if out is None:
+                    service.result(experiment_id, tid)   # raises the error
+                ys[s] = out["y"]
+                note(r, s, ctxs[s], {"retries": 0, "wall_s": 0.0})
+                waiting = [
+                    w for w in range(q) if ys[w] is None
+                    and (e := service.queue.get(
+                        experiment_id, tid_by_slot[w])) is not None
+                    and e.state == "pending"]
+                landed = [w for w in range(q) if ys[w] is not None]
+                if len(waiting) > 1 and landed:
+                    x01 = (xq - explorer._lo) / explorer._span
+                    scores = explorer.rescore(
+                        x01[landed], [ys[w] for w in landed], x01[waiting])
+                    if service.update_priorities(
+                            experiment_id,
+                            {tid_by_slot[w]: float(scores[i])
+                             for i, w in enumerate(waiting)}):
+                        repriorities += 1
+        elif environment is None:
             for s in range(q):
                 a_t0 = time.monotonic()
                 out = task.run(ctxs[s])

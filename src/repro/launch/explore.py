@@ -35,8 +35,10 @@ from repro.runtime import sharding as shd
 
 def make_init_pool(fault_rate: float = 0.0, *, workers: int = 3,
                    capacity: int = 2, retries: int = 8,
+                   backoff_s: float = 0.05,
                    timeout_s: float = None) -> EnvironmentPool:
-    """The streaming-init evaluation pool: a few heterogeneous local
+    """THE local evaluation-pool factory (drivers, benches, and the
+    service mode all build their pools here): a few heterogeneous local
     workers, optionally with an injected per-attempt failure rate (the
     paper's unreliable-EGI regime, reproduced on one host)."""
     envs = [LocalEnvironment(
@@ -44,7 +46,7 @@ def make_init_pool(fault_rate: float = 0.0, *, workers: int = 3,
         faults=(FaultSpec(fail_rate=fault_rate, seed=i)
                 if fault_rate > 0 else None))
         for i in range(workers)]
-    return EnvironmentPool(envs, retries=retries, backoff_s=0.05)
+    return EnvironmentPool(envs, retries=retries, backoff_s=backoff_s)
 
 
 def calibrate(*, reduced: bool = True, n_islands: int = 8, mu: int = 16,
@@ -261,12 +263,105 @@ def calibrate_surrogate(*, reduced: bool = True, rounds: int = 8, q: int = 8,
     return res, out
 
 
+def calibrate_service(*, reduced: bool = True, init_population: int = 2048,
+                      init_chunk: int = 256, rounds: int = 4, q: int = 8,
+                      n_init: int = 16, replicates: int = 3,
+                      fault_rate: float = 0.0,
+                      out_dir: str = "/tmp/ants_service", printer=print):
+    """Service mode: TWO experiments — a streaming GA-population init and a
+    surrogate calibration — run *concurrently* as tenants of ONE
+    :class:`~repro.core.service.ExplorationService` over one shared
+    environment pool (the paper's always-on delegation layer, ROADMAP
+    open item 1). The queue journals to ``<out>/queue.jsonl`` and outputs
+    memoize under ``<out>/cache``, so killing this driver mid-run and
+    rerunning it resumes both tenants without re-executing finished work.
+    """
+    from repro.core import ExplorationService
+
+    os.makedirs(out_dir, exist_ok=True)
+    ants_cfg = REDUCED if reduced else CONFIG
+    ga_cfg = NSGA2Config(mu=16, genome_dim=2, bounds=BOUNDS, n_objectives=3)
+    ga_eval = replicated_batch(
+        lambda keys, genomes: simulate_batch(ants_cfg, keys, genomes[:, 0],
+                                             genomes[:, 1]),
+        replicates)
+    sur_cfg = SurrogateConfig(bounds=BOUNDS, q=q, n_init=n_init, seed=0)
+    sur_eval = ants_scalar_eval(reduced, replicates)
+
+    pool = make_init_pool(fault_rate)
+    service = ExplorationService(
+        pool, cache=os.path.join(out_dir, "cache"),
+        journal=os.path.join(out_dir, "queue.jsonl"))
+    results: dict = {}
+    errors: list = []
+
+    def ga_tenant():
+        try:
+            results["ga"] = ga.evaluate_population_streaming(
+                ga_cfg, ga_eval, 0, n_total=init_population,
+                chunk=init_chunk, service=service, experiment_id="ga-init")
+        except Exception as e:            # surfaced after join
+            errors.append(e)
+
+    def surrogate_tenant():
+        try:
+            results["surrogate"] = run_surrogate(
+                sur_cfg, sur_eval, rounds=rounds, service=service,
+                experiment_id="surrogate")
+        except Exception as e:
+            errors.append(e)
+
+    t0 = time.time()
+    import threading
+    tenants = [threading.Thread(target=ga_tenant, name="tenant-ga"),
+               threading.Thread(target=surrogate_tenant,
+                                name="tenant-surrogate")]
+    try:
+        for t in tenants:
+            t.start()
+        for t in tenants:
+            t.join()
+    finally:
+        for eid in ("ga-init", "surrogate"):
+            service.record(eid).save(
+                os.path.join(out_dir, f"provenance_{eid}.json"))
+        service.shutdown()
+        pool.shutdown()
+    if errors:
+        raise errors[0]
+    dt = time.time() - t0
+    sres, rres = results["ga"], results["surrogate"]
+    n_jobs = sres.chunks_done + rres.rounds_done * q
+    printer(f"[explore] service: 2 tenants, {n_jobs} jobs through one pool "
+            f"in {dt:.1f}s — init {init_population} individuals "
+            f"({sres.attempts} attempts), surrogate best "
+            f"{rres.best_objective:.1f} at {rres.best_genome} "
+            f"({rres.repriorities} queue re-prioritizations)")
+    out = {
+        "init": {"n_individuals": init_population,
+                 "attempts": sres.attempts, "wall_s": sres.wall_s},
+        "surrogate": {"best_genome": np.asarray(rres.best_genome).tolist(),
+                      "best_objective": rres.best_objective,
+                      "repriorities": rres.repriorities,
+                      "wall_s": rres.wall_s},
+        "queue": service.query(),
+        "fault_rate": fault_rate,
+        "wall_s": dt,
+    }
+    with open(os.path.join(out_dir, "service_result.json"), "w") as f:
+        json.dump(out, f, indent=2)
+    return results, out
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--method", choices=("islands", "surrogate"),
+    ap.add_argument("--method", choices=("islands", "surrogate", "service"),
                     default="islands",
                     help="islands: fused island-model NSGA-II; surrogate: "
-                         "GP + q-EI ask/tell through the environment pool")
+                         "GP + q-EI ask/tell through the environment pool; "
+                         "service: GA init + surrogate calibration "
+                         "concurrently through one shared "
+                         "ExplorationService (restart-safe queue)")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--islands", type=int, default=8)
     ap.add_argument("--mu", type=int, default=16)
@@ -298,6 +393,14 @@ def main():
     ap.add_argument("--acquisition", choices=("qei", "qucb"), default="qei")
     ap.add_argument("--out", default="/tmp/ants")
     args = ap.parse_args()
+    if args.method == "service":
+        calibrate_service(reduced=args.reduced,
+                          init_population=args.init_population or 2048,
+                          init_chunk=min(args.init_chunk, 256),
+                          rounds=args.rounds, q=args.q, n_init=args.n_init,
+                          replicates=args.replicates,
+                          fault_rate=args.fault_rate, out_dir=args.out)
+        return
     if args.method == "surrogate":
         calibrate_surrogate(reduced=args.reduced, rounds=args.rounds,
                             q=args.q, n_init=args.n_init,

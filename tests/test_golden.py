@@ -1,5 +1,5 @@
-"""Golden-run regression suite: pinned outputs of three end-to-end flows
-(ISSUE 5) so a future refactor cannot silently change results.
+"""Golden-run regression suite: pinned outputs of four end-to-end flows
+(ISSUEs 5, 6) so a future refactor cannot silently change results.
 
 Pinned flows:
 - ``listing3``: the paper's Listing-3 workflow (5-seed replication of the
@@ -7,7 +7,10 @@ Pinned flows:
 - ``island_epoch``: one island-GA epoch of the fused selection engine
   (synthetic fitness — pins the NSGA-II/archive numerics, not the sim);
 - ``surrogate_iteration``: Sobol seeding + one GP/q-EI ask/tell round of
-  the surrogate engine.
+  the surrogate engine;
+- ``service_two_tenant``: GA streaming init + surrogate tenant sharing one
+  journaled ExplorationService, including a restart-resume from the
+  journal + cache (service mode must never change the numbers).
 
 Two assertion tiers per flow, both against ``tests/golden.json``:
 - **digest tier**: the sha256 content digest of the exact output arrays
@@ -126,10 +129,82 @@ def _flow_surrogate_iteration():
             "objectives": np.asarray(res.objectives, np.float32)}
 
 
+def _flow_service_two_tenant():
+    """Two tenants (GA streaming init + surrogate ask/tell) through ONE
+    journaled ExplorationService, then a driver restart on the same
+    journal + cache: the resumed tenant must execute nothing and still
+    reproduce the pinned arrays bit-for-bit."""
+    import shutil
+    import tempfile
+    import threading
+
+    from conftest import surrogate_quadratic, surrogate_tiny_config
+    from repro.core import (EnvironmentPool, ExplorationService,
+                            LocalEnvironment)
+    from repro.evolution import NSGA2Config, ga
+    from repro.explore.surrogate import run_surrogate
+
+    ga_cfg = NSGA2Config(mu=8, genome_dim=2, bounds=((0., 1.),) * 2,
+                         n_objectives=2)
+
+    def fitness(keys, genomes):
+        noise = jax.vmap(lambda k: jax.random.normal(k, (2,)))(keys)
+        return jnp.stack([genomes[:, 0], genomes[:, 1]], 1) + 0.01 * noise
+
+    def make_service(root):
+        pool = EnvironmentPool(
+            [LocalEnvironment(name="a", capacity=2),
+             LocalEnvironment(name="b", capacity=2)], backoff_s=0.0)
+        return ExplorationService(pool, cache=os.path.join(root, "cache"),
+                                  journal=os.path.join(root, "q.jsonl"))
+
+    root = tempfile.mkdtemp(prefix="repro_golden_svc_")
+    try:
+        svc = make_service(root)
+        out = {}
+
+        def ga_tenant():
+            res = ga.evaluate_population_streaming(
+                ga_cfg, fitness, 0, n_total=64, chunk=16, service=svc,
+                experiment_id="ga")
+            out["ga"] = res.objectives
+
+        def sur_tenant():
+            res = run_surrogate(surrogate_tiny_config(), surrogate_quadratic,
+                                rounds=3, service=svc, experiment_id="sur")
+            out["sur"] = (res.genomes, res.objectives)
+
+        ts = [threading.Thread(target=ga_tenant),
+              threading.Thread(target=sur_tenant)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(timeout=300)
+        svc.shutdown()
+        svc.pool.shutdown()
+
+        # driver restart: same journal + cache, nothing may re-execute
+        svc2 = make_service(root)
+        res2 = run_surrogate(surrogate_tiny_config(), surrogate_quadratic,
+                             rounds=3, service=svc2, experiment_id="sur")
+        assert svc2.pool.stats.snapshot()["submitted"] == 0, \
+            "restart re-executed journaled+cached firings"
+        assert np.array_equal(np.asarray(res2.genomes),
+                              np.asarray(out["sur"][0]))
+        svc2.shutdown()
+        svc2.pool.shutdown()
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return {"ga_objectives": np.asarray(out["ga"], np.float32),
+            "sur_genomes": np.asarray(res2.genomes, np.float32),
+            "sur_objectives": np.asarray(res2.objectives, np.float32)}
+
+
 FLOWS = {
     "listing3": _flow_listing3,
     "island_epoch": _flow_island_epoch,
     "surrogate_iteration": _flow_surrogate_iteration,
+    "service_two_tenant": _flow_service_two_tenant,
 }
 
 
@@ -197,3 +272,8 @@ def test_golden_island_ga_epoch(golden):
 @pytest.mark.slow
 def test_golden_surrogate_iteration(golden):
     _check(golden, "surrogate_iteration", _flow_surrogate_iteration())
+
+
+@pytest.mark.slow
+def test_golden_service_two_tenant(golden):
+    _check(golden, "service_two_tenant", _flow_service_two_tenant())

@@ -1,0 +1,594 @@
+"""Concurrency suite for the always-on exploration service (ISSUE 6).
+
+Four layers, matching the tentpole's enabling refactor plus the service
+built on top of it:
+
+1. **Reentrant map_explore** — two threads driving concurrent fan-outs on
+   ONE shared pool (the exact PR-4 hang scenario: per-member deques were
+   shared state) must complete, stay lane-correct, and produce results
+   bit-exact to the serial reference — failure-free and under a 35%
+   injected-fault chaos mix with speculative duplicates.
+2. **attempt_once timeout semantics** — queueing delay behind a saturated
+   ``_attempt_pool`` must not count against an attempt's timeout, and
+   abandoned hung attempts must not pin executor slots (the pool drains
+   back to full capacity).
+3. **meta["attempts"] immutability + PoolStats consistency** — a losing
+   speculative attempt landing after ``submit_traced`` returned must not
+   mutate the already-emitted meta/TaskRecord; hammered counters must
+   reconcile (submitted == completed + failed + in_flight).
+4. **TaskQueue / ExplorationService** — priority order, journal replay,
+   idempotent resubmission, OSPREY-style ``update_priorities``, two
+   concurrent tenants bit-exact vs their serial one-pool-each runs (clean
+   and chaos), and kill+restart resume from journal+cache without
+   re-executing completed work.
+
+Injected hangs are bounded and interruptible, so the suite cannot wedge
+even without pytest-timeout; CI runs it under ``--timeout`` regardless.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (Context, EnvironmentPool, ExplorationService,
+                        FaultSpec, LocalEnvironment, PyTask, Val)
+from repro.core.taskqueue import TaskQueue
+
+x = Val("x", float)
+y = Val("y", float)
+
+SQ = PyTask("sq", lambda ctx: {"y": ctx["x"] ** 2}, inputs=(x,),
+            outputs=(y,))
+
+
+def make_pool(*envs, **kw):
+    kw.setdefault("backoff_s", 0.0)
+    return EnvironmentPool(list(envs), **kw)
+
+
+def chaos_members(n=3, hang_s=0.4):
+    """Three members under a ~35% per-attempt fault mix (fail + hang +
+    corrupt), decorrelated by seed, every attempt eligible to fail."""
+    return [LocalEnvironment(
+        name=f"w{i}", capacity=2,
+        faults=FaultSpec(fail_rate=0.25, fail_limit=None,
+                         hang_rate=0.05, hang_limit=2, hang_s=hang_s,
+                         corrupt_rate=0.05, corrupt_limit=2, seed=i))
+        for i in range(n)]
+
+
+# ===========================================================================
+# 1. reentrant map_explore: concurrent fan-outs on one shared pool
+# ===========================================================================
+def _concurrent_fanouts(pool, xs_a, xs_b):
+    results = {}
+    errors = []
+
+    def fanout(key, xs):
+        try:
+            outs = pool.map_explore(SQ, [Context(x=v) for v in xs])
+            results[key] = [o["y"] for o in outs]
+        except Exception as e:              # surfaced after join
+            errors.append(e)
+
+    ta = threading.Thread(target=fanout, args=("a", xs_a))
+    tb = threading.Thread(target=fanout, args=("b", xs_b))
+    ta.start(), tb.start()
+    ta.join(timeout=60), tb.join(timeout=60)
+    assert not ta.is_alive() and not tb.is_alive(), \
+        "concurrent map_explore fan-outs hung (PR-4 shared-deque bug)"
+    assert not errors, errors
+    return results
+
+
+def test_concurrent_map_explore_is_lane_correct_and_bit_exact():
+    xs_a = [float(i) for i in range(40)]
+    xs_b = [float(100 + i) for i in range(40)]
+    pool = make_pool(LocalEnvironment(name="a", capacity=2),
+                     LocalEnvironment(name="b", capacity=3))
+    try:
+        for _ in range(3):                  # stress the interleave a little
+            results = _concurrent_fanouts(pool, xs_a, xs_b)
+            assert results["a"] == [v ** 2 for v in xs_a]   # lane order
+            assert results["b"] == [v ** 2 for v in xs_b]
+    finally:
+        pool.shutdown()
+
+
+@pytest.mark.slow
+def test_concurrent_map_explore_under_chaos_bit_exact():
+    xs_a = [float(i) for i in range(30)]
+    xs_b = [float(200 + i) for i in range(30)]
+    pool = make_pool(*chaos_members(), retries=16, speculative=2)
+    try:
+        results = _concurrent_fanouts(pool, xs_a, xs_b)
+        assert results["a"] == [v ** 2 for v in xs_a]
+        assert results["b"] == [v ** 2 for v in xs_b]
+    finally:
+        pool.shutdown()
+
+
+def test_concurrent_fanouts_do_not_cross_lane_state():
+    # ragged sizes: the two calls deal different lane counts to the same
+    # members; per-call deques must never leak lanes across calls
+    pool = make_pool(LocalEnvironment(name="a", capacity=2),
+                     LocalEnvironment(name="b", capacity=1))
+    try:
+        results = _concurrent_fanouts(
+            pool, [float(i) for i in range(17)],
+            [float(50 + i) for i in range(5)])
+        assert results["a"] == [float(i) ** 2 for i in range(17)]
+        assert results["b"] == [float(50 + i) ** 2 for i in range(5)]
+    finally:
+        pool.shutdown()
+
+
+# ===========================================================================
+# 2. attempt_once timeout semantics
+# ===========================================================================
+def test_queueing_delay_does_not_count_against_timeout():
+    # 2 attempt slots, 0.25s of real work per attempt, timeout 0.4s: with 8
+    # concurrent submissions the last wave queues ~0.75s — far past the
+    # timeout if (bug) the budget opened at executor enqueue.
+    delay = [0.25]
+    work = PyTask("work", lambda ctx: (time.sleep(delay[0]),
+                                       {"y": ctx["x"] ** 2})[1],
+                  inputs=(x,), outputs=(y,))
+    env = LocalEnvironment(capacity=2, timeout_s=0.4, retries=0,
+                           backoff_s=0.0)
+    outs = [None] * 8
+    errs = []
+
+    def one(i):
+        try:
+            outs[i] = env.submit(work, Context(x=float(i)))["y"]
+        except Exception as e:
+            errs.append(e)
+
+    threads = [threading.Thread(target=one, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    assert not errs, f"queueing delay was charged to the attempt: {errs}"
+    assert outs == [float(i) ** 2 for i in range(8)]
+    assert env.stats.hung == 0
+
+
+def test_abandoned_hung_attempts_do_not_pin_attempt_pool():
+    # every first attempt hangs for 30s; the timeout abandons it after
+    # 0.15s and the per-attempt wake must free the slot immediately —
+    # otherwise 4 jobs x 1 hang on a 2-slot pool would take >= 30s.
+    env = LocalEnvironment(
+        capacity=2, timeout_s=0.15, retries=2, backoff_s=0.0,
+        faults=FaultSpec(hang_rate=1.0, hang_limit=1, hang_s=30.0))
+    t0 = time.monotonic()
+    outs = [env.submit(SQ, Context(x=float(i)))["y"] for i in range(4)]
+    wall = time.monotonic() - t0
+    assert outs == [float(i) ** 2 for i in range(4)]
+    assert env.stats.hung == 4                 # one abandoned per job
+    assert wall < 10.0, \
+        f"abandoned attempts pinned the attempt pool ({wall:.1f}s)"
+    # the pool has drained back to full capacity: a clean batch of more
+    # jobs than slots completes promptly
+    t0 = time.monotonic()
+    clean = [env.submit(SQ, Context(x=float(10 + i)))["y"]
+             for i in range(4)]
+    assert clean == [float(10 + i) ** 2 for i in range(4)]
+    assert time.monotonic() - t0 < 5.0
+    env.release_hangs()
+
+
+def test_release_hangs_wakes_per_attempt_events():
+    env = LocalEnvironment(
+        capacity=2, timeout_s=0.1, retries=1, backoff_s=0.0,
+        faults=FaultSpec(hang_rate=1.0, hang_limit=1, hang_s=60.0))
+    out = env.submit(SQ, Context(x=3.0))
+    assert out["y"] == 9.0
+    t0 = time.monotonic()
+    env.release_hangs()
+    # no 60s straggler may survive: the abandoned attempt's sleep was
+    # interrupted either by its own wake (at timeout) or by release_hangs
+    assert time.monotonic() - t0 < 1.0
+
+
+# ===========================================================================
+# 3a. meta["attempts"] aliasing
+# ===========================================================================
+def test_pool_speculative_loser_does_not_mutate_returned_meta():
+    fast = LocalEnvironment(name="fast", capacity=2)
+    slow = LocalEnvironment(name="slow", capacity=2, latency_s=0.6)
+    pool = make_pool(fast, slow, speculative=2)
+    try:
+        out, meta = pool.submit_traced(SQ, Context(x=3.0))
+        assert out["y"] == 9.0
+        n_at_return = len(meta["attempts"])
+        snapshot = [dict(a) for a in meta["attempts"]]
+        time.sleep(1.2)                     # the slow loser lands now
+        assert len(meta["attempts"]) == n_at_return, \
+            "loser mutated meta['attempts'] after submit_traced returned"
+        assert meta["attempts"] == snapshot
+    finally:
+        pool.shutdown()
+
+
+def test_env_speculative_loser_does_not_mutate_returned_meta():
+    # attempt 0 hangs (slow loser), attempt 1 wins immediately; the loser
+    # finishes its bounded hang later and must append only internally
+    env = LocalEnvironment(
+        speculative=2, backoff_s=0.0,
+        faults=FaultSpec(hang_rate=1.0, hang_limit=1, hang_s=1.0))
+    out, meta = env.submit_traced(SQ, Context(x=4.0))
+    assert out["y"] == 16.0
+    n_at_return = len(meta["attempts"])
+    time.sleep(1.5)
+    env.release_hangs()
+    assert len(meta["attempts"]) == n_at_return, \
+        "speculative loser mutated the returned meta"
+
+
+def test_ga_stream_records_are_immune_to_late_losers():
+    from repro.core.scheduler import RunRecord, _utcnow
+    from repro.evolution import NSGA2Config, ga
+    import jax
+    import jax.numpy as jnp
+
+    cfg = NSGA2Config(mu=8, genome_dim=2, bounds=((0., 1.),) * 2,
+                      n_objectives=2)
+
+    def fitness(keys, genomes):
+        noise = jax.vmap(lambda k: jax.random.normal(k, (2,)))(keys)
+        return jnp.stack([genomes[:, 0], genomes[:, 1]], 1) + 0.01 * noise
+
+    fast = LocalEnvironment(name="fast", capacity=2)
+    slow = LocalEnvironment(name="slow", capacity=2, latency_s=0.5)
+    pool = make_pool(fast, slow, speculative=2)
+    record = RunRecord(workflow="t", scheduler="stream", environment="pool",
+                       started_at=_utcnow())
+    try:
+        ga.evaluate_population_streaming(
+            cfg, fitness, 0, n_total=64, chunk=16, environment=pool,
+            record=record)
+        lens = [len(t.attempts or ()) for t in record.tasks]
+        time.sleep(1.0)                     # losers land after the run
+        assert [len(t.attempts or ()) for t in record.tasks] == lens, \
+            "TaskRecord.attempts mutated by a late speculative loser"
+    finally:
+        pool.shutdown()
+
+
+# ===========================================================================
+# 3b. PoolStats consistency under threads
+# ===========================================================================
+def test_poolstats_inc_reconciles_under_hammering():
+    from repro.core import PoolStats
+    stats = PoolStats()
+    N, K = 16, 500
+
+    def hammer():
+        for _ in range(K):
+            stats.inc(submitted=1, in_flight=1)
+            stats.inc(completed=1, in_flight=-1)
+
+    threads = [threading.Thread(target=hammer) for _ in range(N)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    snap = stats.snapshot()
+    assert snap["submitted"] == N * K
+    assert snap["completed"] == N * K
+    assert snap["in_flight"] == 0
+    assert snap["submitted"] == (snap["completed"] + snap["failed"]
+                                 + snap["in_flight"])
+
+
+def test_pool_counters_reconcile_across_concurrent_workloads():
+    boom = PyTask("boom", lambda ctx: (_ for _ in ()).throw(
+        ValueError("transient")) if ctx["x"] < 0 else {"y": ctx["x"] ** 2},
+        inputs=(x,), outputs=(y,))
+    pool = make_pool(LocalEnvironment(name="a", capacity=2),
+                     LocalEnvironment(name="b", capacity=2), retries=1)
+    n_ok, n_bad = [0], [0]
+    lock = threading.Lock()
+
+    def submits(seed):
+        for i in range(15):
+            v = float(i) if (i + seed) % 5 else -1.0
+            try:
+                pool.submit(boom, Context(x=v))
+                with lock:
+                    n_ok[0] += 1
+            except RuntimeError:
+                with lock:
+                    n_bad[0] += 1
+
+    def fanout():
+        outs = pool.map_explore(SQ, [Context(x=float(i)) for i in range(20)])
+        assert [o["y"] for o in outs] == [float(i) ** 2 for i in range(20)]
+
+    threads = [threading.Thread(target=submits, args=(s,)) for s in range(4)]
+    threads += [threading.Thread(target=fanout) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    snap = pool.stats.snapshot()
+    assert snap["in_flight"] == 0
+    assert snap["submitted"] == 4 * 15 + 2 * 20
+    assert snap["completed"] == n_ok[0] + 2 * 20
+    assert snap["failed"] == n_bad[0] > 0
+    assert snap["submitted"] == (snap["completed"] + snap["failed"]
+                                 + snap["in_flight"])
+    pool.shutdown()
+
+
+# ===========================================================================
+# 4a. TaskQueue unit behaviour
+# ===========================================================================
+def test_taskqueue_priority_and_fifo_order():
+    q = TaskQueue()
+    for i, pri in enumerate([1.0, 3.0, 3.0, 2.0]):
+        q.submit("e", f"t{i}", pri, SQ, Context(x=float(i)))
+    popped = [q.pop_next(timeout=0.1).task_id for _ in range(4)]
+    # highest priority first; FIFO between the two 3.0 ties
+    assert popped == ["t1", "t2", "t3", "t0"]
+
+
+def test_taskqueue_update_priorities_reranks_pending_only():
+    q = TaskQueue()
+    ids = [f"t{i}" for i in range(4)]
+    for i, tid in enumerate(ids):
+        q.submit("e", tid, float(i), SQ, Context(x=float(i)))
+    first = q.pop_next(timeout=0.1)         # t3 (highest) now running
+    assert first.task_id == "t3"
+    assert q.update_priorities("e", {"t0": 10.0, "t3": 99.0}) == 2
+    assert q.pop_next(timeout=0.1).task_id == "t0"   # re-ranked up
+    assert first.state == "running"         # running entry untouched
+
+
+def test_taskqueue_idempotent_resubmit_and_done():
+    q = TaskQueue()
+    e1, created1 = q.submit("e", "t", 1.0, SQ, Context(x=2.0))
+    e2, created2 = q.submit("e", "t", 5.0, SQ, Context(x=2.0))
+    assert created1 and not created2 and e1 is e2
+    assert e1.priority == 1.0               # original priority stands
+    got = q.pop_next(timeout=0.1)
+    q.mark_done(got)
+    assert q.pop_next(timeout=0.05) is None  # no duplicate run
+    assert q.query("e") == {"pending": 0, "running": 0, "done": 1,
+                            "failed": 0}
+
+
+def test_taskqueue_failed_resubmit_retries():
+    q = TaskQueue()
+    q.submit("e", "t", 1.0, SQ, Context(x=2.0))
+    got = q.pop_next(timeout=0.1)
+    q.mark_done(got, ok=False, error="boom")
+    assert q.query("e")["failed"] == 1
+    q.submit("e", "t", 1.0, SQ, Context(x=2.0))   # resubmit retries
+    again = q.pop_next(timeout=0.1)
+    assert again is not None and again.task_id == "t"
+
+
+def test_taskqueue_journal_replay_and_payload_reattach(tmp_path):
+    journal = str(tmp_path / "queue.jsonl")
+    q = TaskQueue(journal)
+    q.submit("e", "t0", 2.0, SQ, Context(x=0.0))
+    q.submit("e", "t1", 1.0, SQ, Context(x=1.0))
+    q.submit("e", "t2", 20.0, SQ, Context(x=2.0))
+    q.update_priorities("e", {"t1": 9.0})
+    done = q.pop_next(timeout=0.1)          # t2, highest
+    assert done.task_id == "t2"
+    q.mark_done(done)
+    claimed = q.pop_next(timeout=0.1)       # t1 claimed but NEVER finished
+    assert claimed.task_id == "t1"
+    q.close()                               # driver dies here
+
+    q2 = TaskQueue(journal)                 # restart
+    assert q2.query("e") == {"pending": 2, "running": 0, "done": 1,
+                             "failed": 0}   # orphaned running -> pending
+    # replayed entries are payload-less: nothing runnable yet
+    assert q2.pop_next(timeout=0.05) is None
+    # idempotent resubmission re-attaches payloads, preserving the
+    # journaled seq and (updated) priority
+    for i, tid in enumerate(["t0", "t1", "t2"]):
+        e, created = q2.submit("e", tid, 0.5, SQ, Context(x=float(i)))
+        assert not created
+    assert q2.get("e", "t1").priority == 9.0   # journaled update survives
+    assert q2.get("e", "t2").state == "done"   # done stays done
+    assert q2.pop_next(timeout=0.1).task_id == "t1"   # highest priority
+    assert q2.pop_next(timeout=0.1).task_id == "t0"
+    assert q2.pop_next(timeout=0.05) is None
+    q2.close()
+
+
+def test_taskqueue_replay_tolerates_torn_tail(tmp_path):
+    journal = str(tmp_path / "queue.jsonl")
+    q = TaskQueue(journal)
+    q.submit("e", "t0", 1.0, SQ, Context(x=0.0))
+    q.close()
+    with open(journal, "a") as f:
+        f.write('{"op": "submit", "key": "e/t1"')   # torn mid-crash write
+    q2 = TaskQueue(journal)
+    assert len(q2) == 1                     # torn line ignored
+    q2.close()
+
+
+# ===========================================================================
+# 4b. ExplorationService
+# ===========================================================================
+def serve(pool=None, **kw):
+    pool = pool or make_pool(LocalEnvironment(name="a", capacity=2),
+                             LocalEnvironment(name="b", capacity=2))
+    return ExplorationService(pool, **kw)
+
+
+def test_service_runs_and_memoizes_one_experiment():
+    svc = serve()
+    try:
+        jobs = [(SQ, Context(x=float(i))) for i in range(10)]
+        ids = svc.submit_tasks("exp", jobs, priority=1.0)
+        res = svc.wait("exp", ids, timeout=30)
+        assert [res[t]["y"] for t in ids] == [float(i) ** 2
+                                              for i in range(10)]
+        # resubmission is idempotent: served from cache, no re-execution
+        before = svc.pool.stats.snapshot()["submitted"]
+        ids2 = svc.submit_tasks("exp", jobs, priority=1.0)
+        assert ids2 == ids
+        assert svc.pool.stats.snapshot()["submitted"] == before
+        rec = svc.record("exp")
+        assert len(rec.tasks) == 10
+        assert {t.mode for t in rec.tasks} == {"service"}
+    finally:
+        svc.shutdown()
+        svc.pool.shutdown()
+
+
+def test_service_two_tenants_bit_exact_vs_serial():
+    xs_a = [float(i) for i in range(25)]
+    xs_b = [float(300 + i) for i in range(25)]
+    svc = serve()
+    results = {}
+
+    def tenant(eid, xs):
+        ids = svc.submit_tasks(eid, [(SQ, Context(x=v)) for v in xs])
+        res = svc.wait(eid, ids, timeout=60)
+        results[eid] = [res[t]["y"] for t in ids]
+
+    try:
+        ta = threading.Thread(target=tenant, args=("A", xs_a))
+        tb = threading.Thread(target=tenant, args=("B", xs_b))
+        ta.start(), tb.start()
+        ta.join(timeout=60), tb.join(timeout=60)
+        assert results["A"] == [v ** 2 for v in xs_a]
+        assert results["B"] == [v ** 2 for v in xs_b]
+        assert svc.query("A")["done"] == 25 and svc.query("B")["done"] == 25
+    finally:
+        svc.shutdown()
+        svc.pool.shutdown()
+
+
+@pytest.mark.slow
+def test_service_two_tenants_bit_exact_under_chaos():
+    pool = make_pool(*chaos_members(), retries=16, speculative=2)
+    svc = serve(pool)
+    xs_a = [float(i) for i in range(20)]
+    xs_b = [float(400 + i) for i in range(20)]
+    results = {}
+
+    def tenant(eid, xs):
+        ids = svc.submit_tasks(eid, [(SQ, Context(x=v)) for v in xs])
+        res = svc.wait(eid, ids, timeout=120)
+        results[eid] = [res[t]["y"] for t in ids]
+
+    try:
+        ts = [threading.Thread(target=tenant, args=("A", xs_a)),
+              threading.Thread(target=tenant, args=("B", xs_b))]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(timeout=120)
+        # bit-exact: pure tasks — 35% chaos changes scheduling, not values
+        assert results["A"] == [v ** 2 for v in xs_a]
+        assert results["B"] == [v ** 2 for v in xs_b]
+    finally:
+        svc.shutdown()
+        svc.pool.shutdown()
+
+
+def test_service_restart_resumes_without_reexecution(tmp_path):
+    slow_sq = PyTask("slow_sq", lambda ctx: (time.sleep(0.05),
+                                             {"y": ctx["x"] ** 2})[1],
+                     inputs=(x,), outputs=(y,))
+    jobs = [(slow_sq, Context(x=float(i))) for i in range(20)]
+    cache_dir, journal = str(tmp_path / "cache"), str(tmp_path / "q.jsonl")
+
+    pool1 = make_pool(LocalEnvironment(name="a", capacity=2))
+    svc1 = ExplorationService(pool1, cache=cache_dir, journal=journal,
+                              workers=2)
+    svc1.submit_tasks("exp", jobs)
+    while svc1.query("exp")["done"] < 5:    # let part of the work finish
+        time.sleep(0.01)
+    svc1.shutdown()                         # driver dies mid-run
+    pool1.shutdown()
+    done1 = svc1.query("exp")["done"]
+    ran1 = pool1.stats.snapshot()["submitted"]
+    assert 0 < done1 < 20
+
+    pool2 = make_pool(LocalEnvironment(name="a", capacity=2))
+    svc2 = ExplorationService(pool2, cache=cache_dir, journal=journal)
+    try:
+        ids = svc2.submit_tasks("exp", jobs)    # idempotent resubmit
+        res = svc2.wait("exp", ids, timeout=60)
+        assert [res[t]["y"] for t in ids] == [float(i) ** 2
+                                              for i in range(20)]
+        ran2 = pool2.stats.snapshot()["submitted"]
+        assert ran1 + ran2 == 20, \
+            f"restart re-executed completed tasks ({ran1}+{ran2} != 20)"
+        rec = svc2.record("exp")
+        assert sum(t.cache_hit for t in rec.tasks) >= done1
+    finally:
+        svc2.shutdown()
+        pool2.shutdown()
+
+
+def test_service_update_priorities_orders_pending_work():
+    gate = PyTask("gate", lambda ctx: (time.sleep(1.0), {"y": 0.0})[1],
+                  inputs=(x,), outputs=(y,))
+    pool = make_pool(LocalEnvironment(name="a", capacity=1))
+    svc = ExplorationService(pool, workers=1)
+    try:
+        [gate_id] = svc.submit_tasks("exp", [(gate, Context(x=-1.0))],
+                                     priority=100.0)
+        ids = svc.submit_tasks("exp", [(SQ, Context(x=float(i)))
+                                       for i in range(5)])
+        # while the gate job occupies the single worker, invert the order
+        n = svc.update_priorities("exp",
+                                  {tid: float(i + 1)
+                                   for i, tid in enumerate(ids)})
+        assert n == 5
+        svc.wait("exp", [gate_id] + ids, timeout=30)
+        completion = [tid for tid, _ in svc.pop_completed("exp")]
+        assert completion[0] == gate_id
+        assert completion[1:] == list(reversed(ids)), \
+            "update_priorities did not re-rank the pending queue"
+    finally:
+        svc.shutdown()
+        pool.shutdown()
+
+
+def test_service_surrogate_tenant_bit_exact_and_reprioritized():
+    from conftest import surrogate_quadratic, surrogate_tiny_config
+    from repro.explore.surrogate import run_surrogate
+
+    cfg = surrogate_tiny_config()
+    ref = run_surrogate(cfg, surrogate_quadratic, rounds=3)
+    svc = serve()
+    try:
+        res = run_surrogate(cfg, surrogate_quadratic, rounds=3, service=svc,
+                            experiment_id="sur")
+        assert np.array_equal(np.asarray(ref.genomes),
+                              np.asarray(res.genomes))
+        assert np.array_equal(np.asarray(ref.objectives),
+                              np.asarray(res.objectives))
+    finally:
+        svc.shutdown()
+        svc.pool.shutdown()
+
+
+def test_service_failed_firing_surfaces_error():
+    bad = PyTask("always_bad",
+                 lambda ctx: (_ for _ in ()).throw(ValueError("no")),
+                 inputs=(x,), outputs=(y,))
+    pool = make_pool(LocalEnvironment(name="a", capacity=2), retries=1)
+    svc = ExplorationService(pool)
+    try:
+        [tid] = svc.submit_tasks("exp", [(bad, Context(x=1.0))])
+        with pytest.raises((RuntimeError, TimeoutError), match="failed"):
+            svc.wait("exp", [tid], timeout=30)
+        assert svc.query("exp")["failed"] == 1
+    finally:
+        svc.shutdown()
+        pool.shutdown()
