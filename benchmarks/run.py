@@ -32,6 +32,15 @@ Paper claims covered:
                         covariance assembly (engine route of the Pallas
                         kernel) vs the naive broadcast jnp reference that
                         materializes the (N, N, D) difference tensor
+  gp_chol               archive-scale GP factorization: the blocked fused
+                        assemble+factor engine (serial lengthscale sweep
+                        under one jit) vs assembling the (G, N, N) stack
+                        and vmapping jnp.linalg.cholesky over the grid,
+                        kernel-vs-oracle bit-exactness asserted in-bench
+  surrogate_bigN        past the O(N^3) wall: a warm surrogate ask/tell
+                        round at 50k-point history via the inducing-point
+                        engine + incremental rank-q tell, with the regret
+                        vs the exact dense path reported
   surrogate_ants        adaptive vs static design of experiments: GP+q-EI
                         ask/tell evaluations-to-target vs the LHS baseline
                         on the ants model (plus proposals/s of the warm
@@ -56,18 +65,44 @@ import numpy as np
 RESULTS: dict = {}
 
 
+class Timing(float):
+    """A per-call time in us that *is* its median (arithmetic works as
+    before) but carries the raw repeat samples, so rows can report the
+    min/max spread — this host's timings fluctuate ~2x under load, and a
+    single-shot mean is indistinguishable from a real regression."""
+    samples: tuple
+
+    def __new__(cls, samples):
+        obj = super().__new__(cls, float(np.median(np.asarray(samples))))
+        obj.samples = tuple(float(s) for s in samples)
+        return obj
+
+    def scaled(self, k: float) -> "Timing":
+        return Timing([s * k for s in self.samples])
+
+
 def timeit(fn, *, warmup=2, iters=5):
+    """Median-of-``iters`` per-call time (us) with the samples attached."""
     for _ in range(warmup):
         fn()
-    t0 = time.perf_counter()
+    samples = []
     for _ in range(iters):
+        t0 = time.perf_counter()
         fn()
-    return (time.perf_counter() - t0) / iters * 1e6   # us
+        samples.append((time.perf_counter() - t0) * 1e6)
+    return Timing(samples)
 
 
 def row(name, us, derived):
     print(f"{name},{us:.1f},{derived}")
-    RESULTS[name] = {"us_per_call": round(float(us), 1), "derived": derived}
+    entry = {"us_per_call": round(float(us), 1), "derived": derived}
+    if isinstance(us, Timing):
+        entry["repeats"] = len(us.samples)
+        entry["min_us"] = round(min(us.samples), 1)
+        entry["max_us"] = round(max(us.samples), 1)
+    else:
+        entry["repeats"] = 1
+    RESULTS[name] = entry
 
 
 def bench_ants_tick(reduced=False):
@@ -103,7 +138,7 @@ def bench_ants_eval_throughput(reduced=False):
 
     us = timeit(one, warmup=1, iters=3)
     per_hour = n / (us / 1e6) * 3600
-    row("ants_eval_throughput", us / n,
+    row("ants_eval_throughput", us.scaled(1 / n),
         f"{per_hour:.0f}_evals_per_hour_single_CPU_core")
 
 
@@ -193,7 +228,7 @@ def bench_workflow_submit(reduced=False):
         for _ in range(100):
             env.submit(t, Context(x=1.0))
 
-    us = timeit(one) / 100
+    us = timeit(one).scaled(1 / 100)
     row("workflow_submit", us, f"{1e6 / us:.0f}_tasks_per_s")
 
 
@@ -394,6 +429,128 @@ def bench_gp_covariance(reduced=False):
         f"{pairs_per_s:.2f}_Gpairs_per_s")
 
 
+def bench_gp_chol(reduced=False):
+    """Archive-scale GP factorization: the blocked fused assemble+factor
+    engine (serial lengthscale sweep under ONE jit — vmapping the blocked
+    program is pathological on CPU, see kernels/ops.py) vs the dense
+    baseline every restart-loop GP fit runs: assemble the full (G, N, N)
+    covariance stack and vmap ``jnp.linalg.cholesky`` over the grid.
+    Bit-exactness of the Pallas kernel vs the jitted oracle is asserted
+    in-bench at an interpret-mode shape (prime true size, padded tiles)."""
+    from repro.kernels import ref as kref
+    from repro.kernels.cholesky import gp_chol_blocked
+
+    n, g, block = (256, 2, 128) if reduced else (4096, 5, 512)
+    d, nugget = 8, 1e-4
+    grid = (0.05, 0.1, 0.2, 0.4, 0.8)[:g]
+    x = jax.random.uniform(jax.random.key(0), (n, d), jnp.float32)
+
+    @jax.jit
+    def blocked_sweep(x):
+        return jnp.stack([
+            kref.gp_chol_blocked_ref(x, n, kind="matern52", lengthscale=ls,
+                                     nugget=nugget, block=block)
+            for ls in grid])
+
+    @jax.jit
+    def lapack_sweep(x):
+        d2 = kref.gp_sqdist_ref(x, x)
+        ks = jnp.stack([kref.gp_kernel_fn("matern52", d2, ls, 1.0)
+                        + nugget * jnp.eye(n, dtype=jnp.float32)
+                        for ls in grid])
+        return jnp.linalg.cholesky(ks)
+
+    us_blk = timeit(lambda: jax.block_until_ready(blocked_sweep(x)),
+                    warmup=1, iters=3)
+    us_lap = timeit(lambda: jax.block_until_ready(lapack_sweep(x)),
+                    warmup=1, iters=3)
+    # same factor, different algorithm: agreement to float32 tolerance
+    np.testing.assert_allclose(np.asarray(blocked_sweep(x)),
+                               np.asarray(lapack_sweep(x)),
+                               rtol=2e-4, atol=2e-4)
+    # the Pallas kernel is bitwise the engine's oracle (interpret mode,
+    # prime true size inside padded tiles, fused assembly path)
+    ns, bs = 83, 64
+    xs = jnp.zeros((128, d), jnp.float32).at[:ns].set(x[:ns])
+    np.testing.assert_array_equal(
+        np.asarray(gp_chol_blocked(xs, ns, kind="matern52", lengthscale=0.2,
+                                   nugget=nugget, block=bs, interpret=True)),
+        np.asarray(jax.jit(lambda xp: kref.gp_chol_blocked_ref(
+            xp, ns, kind="matern52", lengthscale=0.2, nugget=nugget,
+            block=bs))(xs)))
+    speedup = float(us_lap) / float(us_blk)
+    # regression floor, not the headline: steady-state on this idle
+    # single-core host the fused blocked sweep measures ~1.3x (block=512;
+    # block=256 is 4x slower — tile-dot dispatch overhead dominates); the
+    # gap widens to 2-3x when the LAPACK path degrades under load (its
+    # per-factor time was measured fluctuating 0.71-1.58s across
+    # sessions), so a 2x hard assert would be a coin flip. The row
+    # records the measured multiple; the assert catches the engine
+    # falling back behind the baseline.
+    if not reduced:
+        assert speedup >= 1.15, (
+            f"blocked factorization must beat the vmapped LAPACK grid "
+            f"path at n={n} (got {speedup:.2f}x)")
+    row(f"gp_chol_{n}", us_blk,
+        f"{speedup:.2f}x_vs_vmapped_lapack_grid{g}_bit_exact_True")
+
+
+def bench_surrogate_bigN(reduced=False):
+    """The O(N^3) wall, measured end to end: a warm surrogate ask/tell
+    round at archive-scale history through the inducing-point engine
+    (``gp_fit(n_max_exact=...)`` routing + incremental rank-q ``tell``),
+    plus the price of approximating — the regret of the inducing run vs
+    the exact dense run from identical seeded history on a synthetic
+    objective (exact is infeasible at the big N; the regret leg runs at a
+    size where both paths fit)."""
+    from repro.explore import SurrogateConfig, SurrogateExplorer
+
+    n, q, d = (2048, 8, 2) if reduced else (50_000, 8, 2)
+
+    def f(g):
+        return np.asarray((g[:, 0] - 0.3) ** 2 + (g[:, 1] - 0.7) ** 2
+                          + 0.01 * np.sin(17 * g[:, 0]), np.float32)
+
+    def seeded(m, seed=0):
+        rng = np.random.default_rng(seed)
+        x = rng.random((m, d), np.float32).astype(np.float32)
+        return x, f(x)
+
+    cfg = SurrogateConfig(bounds=((0., 1.),) * d, q=q, n_init=16, seed=0,
+                          n_max_exact=1024, n_inducing=256)
+    ex = SurrogateExplorer(cfg)
+    x0, y0 = seeded(n)
+    ex.load_state_arrays({"x01": x0, "y": y0, "round": np.int32(n // q)})
+
+    def one_round():
+        xq = ex.ask()              # warm: incremental state, no refit
+        ex.tell(xq, [float(v) for v in f(xq)])
+
+    us = timeit(one_round, warmup=1, iters=3)   # warmup pays the cold fit
+    if not reduced:
+        assert us < 2e6, f"ask/tell round at N={n} must stay under 2s " \
+                         f"(got {us / 1e6:.2f}s)"
+
+    # regret leg: inducing vs exact from the same history, same budget
+    n2, rounds = (256, 1) if reduced else (1536, 3)
+    x2, y2 = seeded(n2, seed=1)
+    bests = {}
+    for tag, nme in (("exact", 4096), ("inducing", 512)):
+        c = SurrogateConfig(bounds=((0., 1.),) * d, q=q, n_init=16, seed=0,
+                            n_max_exact=nme, n_inducing=256)
+        e2 = SurrogateExplorer(c)
+        e2.load_state_arrays({"x01": x2.copy(), "y": y2.copy(),
+                              "round": np.int32(n2 // q)})
+        for _ in range(rounds):
+            xq = e2.ask()
+            e2.tell(xq, [float(v) for v in f(xq)])
+        bests[tag] = float(e2.best[1])
+    regret = bests["inducing"] - bests["exact"]
+    row(f"surrogate_tell_{n // 1000}k", us,
+        f"{q / (us / 1e6):.1f}_proposals_per_s_warm_round_n{n}_"
+        f"regret_vs_exact_{regret:.2e}")
+
+
 def bench_surrogate_ants(reduced=False):
     """Adaptive vs static DoE on the ants model: evaluations needed to
     reach the objective a median LHS run attains with its FULL budget.
@@ -497,6 +654,8 @@ BENCHES = [
     bench_egi_200k_init,
     bench_service_two_tenant,
     bench_gp_covariance,
+    bench_gp_chol,
+    bench_surrogate_bigN,
     bench_surrogate_ants,
     bench_lm_train_step,
 ]
@@ -545,7 +704,7 @@ def main(argv=None) -> None:
 
     if args.json:
         payload = {
-            "schema": "repro-bench/v1",
+            "schema": "repro-bench/v2",
             "backend": jax.default_backend(),
             "device_count": len(jax.devices()),
             "git_sha": _git_sha(),

@@ -5,3 +5,5 @@ from repro.explore.statistics import StatisticTask, median, mean, std, q  # noqa
 from repro.explore.replication import Replicate, replicated, replicated_batch  # noqa
 from repro.explore.surrogate import (SurrogateConfig, SurrogateExplorer,  # noqa
                                      SurrogateResult, run_surrogate)
+from repro.explore.moacq import (MOSurrogateConfig, MOSurrogateExplorer,  # noqa
+                                 MOSurrogateResult, run_surrogate_mo)

@@ -1,0 +1,451 @@
+"""Multi-objective surrogate acquisition over the NSGA-II archive: qEHVI.
+
+PR 4's surrogate steers a SCALAR objective; the GA side of the repo is
+multi-objective (three food sources, Pareto archives of 200k). This module
+closes the loop between them: independent per-objective GPs (each through
+``surrogate.gp_fit`` — so the archive-scale inducing/ensemble routing
+applies per objective), a candidate pool bred from the live Pareto archive
+by the NSGA-II variation operators, and a qEHVI-style batch acquisition —
+expected hypervolume improvement by Monte-Carlo box sampling:
+
+- HV is estimated by uniform samples U in the [ideal, ref] box; the cells
+  still alive (not dominated by the current front) come from ONE
+  ``ref.dominance_pass_ref`` sweep — the same pairwise pass the NSGA-II
+  engine runs, reused as an acquisition primitive.
+- the batch is built greedily (kriging believer): each slot scores every
+  pool candidate by the expected fraction of alive cells its posterior
+  samples dominate, picks the best, then commits that candidate's
+  posterior mean as a pseudo-observation so later slots chase the
+  *remaining* hypervolume.
+- the archive itself is maintained by ``evolution.archive.merge`` (rank +
+  crowding truncation), exactly the GA's survival rule.
+
+Dominance is invariant under per-objective affine maps, and the box volume
+scales by a constant across candidates, so the acquisition runs in each
+GP's standardized units without changing the argmax.
+
+Determinism: pool breeding, box sampling, and posterior draws all key off
+``fold_in(seed, round)``; ask() is a pure function of (cfg, history), and
+the archive is replayed from history on resume — same trajectory guarantee
+as the scalar explorer (see ``run_surrogate_mo``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.evolution import archive as earchive
+from repro.evolution import nsga2
+from repro.explore import surrogate as sur
+from repro.explore.sampling import _sobol_points
+from repro.kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class MOSurrogateConfig:
+    """qEHVI explorer configuration. GP hyper-parameters mirror
+    :class:`~repro.explore.surrogate.SurrogateConfig` (including the
+    archive-scale routing knobs); the acquisition adds the archive/pool
+    machinery and the hypervolume reference point."""
+    bounds: Tuple[Tuple[float, float], ...]
+    n_objectives: int = 3
+    kernel: str = "matern52"
+    noise: float = 1e-4
+    jitter: float = 1e-6
+    lengthscales: Tuple[float, ...] = (0.05, 0.1, 0.2, 0.4, 0.8)
+    q: int = 8
+    n_init: int = 16
+    mc_samples: int = 32        # posterior draws per candidate
+    hv_samples: int = 128       # box samples for the HV estimate
+    pool_size: int = 64         # candidates per round (archive offspring
+                                # + space-filling)
+    archive_size: int = 64
+    ref_point: Optional[Tuple[float, ...]] = None   # raw units; None =
+                                # observed nadir + 10% span, per round
+    seed: int = 0
+    n_max_exact: int = 1024
+    big_method: str = "inducing"
+    n_inducing: int = 512
+    expert_size: int = 512
+    n_experts_predict: int = 4
+
+    @property
+    def dim(self) -> int:
+        return len(self.bounds)
+
+    @property
+    def n_init_padded(self) -> int:
+        return -(-self.n_init // self.q) * self.q
+
+    def lo(self):
+        return jnp.asarray([b[0] for b in self.bounds], jnp.float32)
+
+    def hi(self):
+        return jnp.asarray([b[1] for b in self.bounds], jnp.float32)
+
+    def gp_config(self) -> sur.SurrogateConfig:
+        """The per-objective scalar GP view of this config (hashable —
+        keys the shared ``surrogate._jitted`` compilation cache)."""
+        return sur.SurrogateConfig(
+            bounds=self.bounds, kernel=self.kernel, noise=self.noise,
+            jitter=self.jitter, lengthscales=self.lengthscales, q=self.q,
+            n_init=self.n_init, seed=self.seed,
+            n_max_exact=self.n_max_exact, big_method=self.big_method,
+            n_inducing=self.n_inducing, expert_size=self.expert_size,
+            n_experts_predict=self.n_experts_predict)
+
+
+def _box(cfg: MOSurrogateConfig, y_std_all):
+    """[ideal, ref] box in standardized units from the observed history
+    (y_std_all (n, M) standardized). The reference point clips to the
+    config's raw ref_point when given (converted by the caller)."""
+    ideal = y_std_all.min(axis=0)
+    nadir = y_std_all.max(axis=0)
+    span = jnp.maximum(nadir - ideal, 1e-6)
+    return ideal - 0.05 * span, nadir + 0.1 * span
+
+
+def qehvi_select(cfg: MOSurrogateConfig, mu_std, var_std, front_std,
+                 pool01, key):
+    """Greedy kriging-believer qEHVI: pick ``cfg.q`` of the P pool
+    candidates. mu_std/var_std (P, M) marginal posteriors (standardized),
+    front_std (F, M) the current non-dominated set (rows of nsga2.BIG for
+    padding), pool01 (P, d). Returns (indices (q,), gains (q,)) — gains
+    are the per-slot expected alive-cell fractions (monotone decreasing:
+    each believer commit shrinks the remaining hypervolume)."""
+    p, m = mu_std.shape
+    ideal, ref = _box(cfg, jnp.concatenate(
+        [front_std[jnp.all(front_std < nsga2.BIG / 2, axis=1)], mu_std]))
+    k_u, k_z = jax.random.split(jax.random.fold_in(key, 7))
+    u = ideal + (ref - ideal) * jax.random.uniform(
+        k_u, (cfg.hv_samples, m), jnp.float32)
+    counts, _ = kref.dominance_pass_ref(u, front_std)
+    alive = np.array(counts == 0)     # np.array: mutable believer mask
+    z = jax.random.normal(k_z, (p, cfg.mc_samples, m), jnp.float32)
+    samples = mu_std[:, None, :] + jnp.sqrt(var_std)[:, None, :] * z
+    # dom[c, s, u]: posterior draw s of candidate c dominates box cell u
+    le = samples[:, :, None, :] <= u[None, None, :, :]
+    lt = samples[:, :, None, :] < u[None, None, :, :]
+    dom = np.asarray(le.all(-1) & lt.any(-1))              # (P, S, NU)
+    mu_np = np.asarray(mu_std)
+    picked: List[int] = []
+    gains: List[float] = []
+    taken = np.zeros(p, bool)
+    for _ in range(cfg.q):
+        gain = (dom & alive[None, None, :]).mean(axis=(1, 2))
+        gain[taken] = -np.inf
+        c = int(np.argmax(gain))
+        picked.append(c)
+        gains.append(float(max(gain[c], 0.0)))
+        taken[c] = True
+        # believer: the pick's posterior mean joins the front — cells it
+        # dominates stop counting for the remaining slots
+        bel = mu_np[c]
+        alive &= ~((bel[None, :] <= np.asarray(u)).all(-1)
+                   & (bel[None, :] < np.asarray(u)).any(-1))
+    return np.asarray(picked), np.asarray(gains, np.float32)
+
+
+def hv_estimate(objectives, ref_point, *, n_samples: int = 4096, seed=0):
+    """Monte-Carlo hypervolume of a raw-unit objective set against
+    ``ref_point``: box-sample fraction x box volume. Deterministic in
+    ``seed`` — the per-round provenance metric of ``run_surrogate_mo``."""
+    obj = jnp.asarray(objectives, jnp.float32)
+    ref = jnp.asarray(ref_point, jnp.float32)
+    ideal = obj.min(axis=0)
+    vol = float(jnp.prod(jnp.maximum(ref - ideal, 0.0)))
+    if vol == 0.0:
+        return 0.0
+    u = ideal + (ref - ideal) * jax.random.uniform(
+        jax.random.key(seed), (n_samples, obj.shape[1]), jnp.float32)
+    counts, _ = kref.dominance_pass_ref(u, obj)
+    return float((counts > 0).mean()) * vol
+
+
+class MOSurrogateExplorer:
+    """Deterministic multi-objective ask/tell explorer: per-objective GPs
+    + qEHVI batches bred from the live Pareto archive."""
+
+    def __init__(self, cfg: MOSurrogateConfig):
+        self.cfg = cfg
+        d, m = cfg.dim, cfg.n_objectives
+        self.x01 = np.zeros((0, d), np.float32)
+        self.y = np.zeros((0, m), np.float32)
+        self.round = 0
+        self._sobol = _sobol_points(cfg.n_init_padded, d,
+                                    cfg.seed).astype(np.float32)
+        self._lo = np.asarray(cfg.lo())
+        self._span = np.asarray(cfg.hi()) - self._lo
+        self._fit = sur._jitted(cfg.gp_config())[0]
+        self.archive = earchive.init_archive(cfg.archive_size, d, m)
+        # unit-cube variation operators over the archive (pool breeding)
+        self._ga = nsga2.NSGA2Config(
+            mu=cfg.archive_size, genome_dim=d,
+            bounds=tuple((0.0, 1.0) for _ in range(d)), n_objectives=m,
+            reevaluate=0.0)
+        self.last_gains: Optional[np.ndarray] = None
+
+    # -------------------------------------------------------------- state io
+    def state_arrays(self):
+        return {"x01": self.x01, "y": self.y,
+                "round": np.int32(self.round)}
+
+    def load_state_arrays(self, tree) -> None:
+        self.x01 = np.asarray(tree["x01"], np.float32)
+        self.y = np.asarray(tree["y"], np.float32)
+        self.round = int(tree["round"])
+        # replay the archive from history in round-sized blocks — merge is
+        # deterministic per call, so the replayed archive is bit-identical
+        # to the one the uninterrupted run carried
+        cfg = self.cfg
+        self.archive = earchive.init_archive(cfg.archive_size, cfg.dim,
+                                             cfg.n_objectives)
+        for s in range(0, len(self.y), cfg.q):
+            self.archive = earchive.merge(
+                self.archive, jnp.asarray(self.x01[s:s + cfg.q]),
+                jnp.asarray(self.y[s:s + cfg.q]))
+
+    # --------------------------------------------------------------- ask/tell
+    def _round_key(self):
+        return jax.random.fold_in(jax.random.key(self.cfg.seed), self.round)
+
+    def _pool(self, key):
+        """Candidate pool: half bred from the archive by the NSGA-II
+        variation operators (tournament + SBX + mutation over rank and
+        crowding), half space-filling."""
+        cfg = self.cfg
+        n_off = cfg.pool_size // 2
+        obj = self.archive.objectives
+        ranks = nsga2.nondominated_ranks(obj, self.archive.valid)
+        crowd = nsga2.crowding_distance(obj, ranks)
+        off, _ = nsga2.make_offspring(self._ga, jax.random.fold_in(key, 3),
+                                      self.archive.genomes, ranks, crowd,
+                                      n_off)
+        rand = jax.random.uniform(
+            jax.random.fold_in(key, 4),
+            (cfg.pool_size - n_off, cfg.dim), jnp.float32)
+        return jnp.clip(jnp.concatenate([off, rand]), 0.0, 1.0)
+
+    def ask(self) -> np.ndarray:
+        """Next batch (q, dim) in physical coordinates, qEHVI-greedy
+        order (slot 0 claimed the most expected hypervolume)."""
+        cfg = self.cfg
+        n = len(self.x01)
+        if n < cfg.n_init_padded:
+            batch01 = self._sobol[n:n + cfg.q]
+            self.last_gains = None
+            return self._lo + np.asarray(batch01, np.float32) * self._span
+        key = self._round_key()
+        x = jnp.asarray(self.x01)
+        gp_cfg = cfg.gp_config()
+        states = [self._fit(x, jnp.asarray(self.y[:, m]))
+                  for m in range(cfg.n_objectives)]
+        pool = self._pool(key)
+        mv = [sur.gp_mean_var(gp_cfg, st, pool) for st in states]
+        mu_std = jnp.stack([m for m, _ in mv], axis=1)       # (P, M)
+        var_std = jnp.stack([v for _, v in mv], axis=1)
+        front_mask = earchive.pareto_front(self.archive)
+        y_mean = jnp.asarray([st.y_mean for st in states])
+        y_std = jnp.asarray([st.y_std for st in states])
+        front_std = jnp.where(
+            front_mask[:, None], (self.archive.objectives - y_mean[None])
+            / y_std[None], nsga2.BIG)
+        if cfg.ref_point is not None:
+            ref_std = (jnp.asarray(cfg.ref_point, jnp.float32) - y_mean) \
+                / y_std
+            # candidates beyond the reference box cannot add hypervolume;
+            # clamp their samples out by inflating their predicted mean
+            mu_std = jnp.where(mu_std > ref_std[None], nsga2.BIG, mu_std)
+        picked, gains = qehvi_select(cfg, mu_std, var_std, front_std,
+                                     pool, key)
+        self.last_gains = gains
+        batch01 = np.asarray(pool)[picked]
+        return self._lo + batch01.astype(np.float32) * self._span
+
+    def tell(self, x, y) -> None:
+        """Record a completed batch (x (m, d) physical, y (m, M) raw
+        objectives) and fold it into the Pareto archive."""
+        x01 = np.clip((np.asarray(x, np.float32) - self._lo) / self._span,
+                      0.0, 1.0).astype(np.float32)
+        ya = np.asarray(y, np.float32)
+        self.x01 = np.concatenate([self.x01, x01])
+        self.y = np.concatenate([self.y, ya])
+        self.round += 1
+        self.archive = earchive.merge(self.archive, jnp.asarray(x01),
+                                      jnp.asarray(ya))
+
+    def front(self):
+        """(genomes physical, objectives raw) of the archive's rank-0
+        members."""
+        mask = np.asarray(earchive.pareto_front(self.archive))
+        g01 = np.asarray(self.archive.genomes)[mask]
+        return (self._lo + g01 * self._span,
+                np.asarray(self.archive.objectives)[mask])
+
+
+class MOSurrogateResult(NamedTuple):
+    genomes: Optional[np.ndarray]        # (n, d) physical
+    objectives: Optional[np.ndarray]     # (n, M) raw
+    front_genomes: Optional[np.ndarray]
+    front_objectives: Optional[np.ndarray]
+    hv: Optional[float]                  # final front hypervolume (MC)
+    rounds_done: int
+    rounds_total: int
+    resumed_rounds: int
+    interrupted: bool
+    attempts: int
+    wall_s: float
+
+
+def make_eval_task_mo(cfg: MOSurrogateConfig, eval_fn: Callable):
+    """One vector-objective evaluation as a PyTask (same fingerprint
+    discipline as the scalar ``make_eval_task``)."""
+    from repro.core.prototype import Val
+    from repro.core.task import PyTask
+    jeval = jax.jit(eval_fn)
+
+    def fn(ctx):
+        r, s = int(ctx["round"]), int(ctx["slot"])
+        x = np.asarray(ctx["x"], np.float32)[None, :]
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.key(cfg.seed), r), s)
+        keys = jax.random.split(key, 1)
+        out = np.asarray(jeval(keys, jnp.asarray(x)))[0]
+        return {"y": tuple(float(v) for v in out)}
+
+    return PyTask("mo_propose_eval", fn,
+                  inputs=(Val("round", int), Val("slot", int), Val("x")),
+                  outputs=(Val("y"),))
+
+
+def run_surrogate_mo(cfg: MOSurrogateConfig, eval_fn: Callable, *,
+                     rounds: int, environment=None,
+                     max_inflight: int = None, checkpoint_dir: str = None,
+                     checkpoint_every: int = 1,
+                     stop_after_rounds: Optional[int] = None, record=None,
+                     progress: Callable[[int, int], None] = None
+                     ) -> MOSurrogateResult:
+    """Drive the qEHVI ask/tell loop: per round, ``ask()`` fixes the
+    batch, evaluations stream through the environment (or run inline),
+    and the barrier ``tell`` feeds the archive. Checkpoint/resume at
+    round boundaries like ``run_surrogate``; per-slot TaskRecords carry
+    mode="surrogate-mo". ``eval_fn(keys (n,), genomes (n, d)) ->
+    (n, M)`` raw objectives (all minimized)."""
+    from repro import checkpoint
+    from repro.core.cache import inputs_digest
+    from repro.core.prototype import Context
+    from repro.core.scheduler import TaskRecord
+
+    t0 = time.monotonic()
+    task = make_eval_task_mo(cfg, eval_fn)
+    explorer = MOSurrogateExplorer(cfg)
+    q, d, m = cfg.q, cfg.dim, cfg.n_objectives
+
+    resumed = 0
+    if checkpoint_dir is not None:
+        last = checkpoint.latest_step(checkpoint_dir)
+        if last:
+            like = {"x01": jax.ShapeDtypeStruct((last * q, d), jnp.float32),
+                    "y": jax.ShapeDtypeStruct((last * q, m), jnp.float32),
+                    "round": jax.ShapeDtypeStruct((), jnp.int32)}
+            explorer.load_state_arrays(
+                checkpoint.restore(checkpoint_dir, last, like))
+            resumed = last
+            if record is not None:
+                for r in range(last):
+                    for s in range(q):
+                        record.tasks.append(TaskRecord(
+                            task=task.name, capsule=r * q + s,
+                            environment="checkpoint", inputs_digest="",
+                            started_s=0.0, wall_s=0.0, retries=0,
+                            cache_hit=True, mode="cache"))
+
+    attempts = 0
+    n_rounds = max(rounds, resumed)
+    stop_at = n_rounds if stop_after_rounds is None \
+        else min(n_rounds, stop_after_rounds)
+    env_name = environment.name if environment is not None else "inline"
+
+    def note(r, s, ctx, meta):
+        nonlocal attempts
+        attempts += len(meta.get("attempts") or ()) or 1
+        if record is not None:
+            record.tasks.append(TaskRecord(
+                task=task.name, capsule=r * q + s, environment=env_name,
+                inputs_digest=inputs_digest(task, ctx),
+                started_s=meta.get("t0", t0) - t0,
+                wall_s=meta.get("wall_s", 0.0),
+                retries=meta.get("retries", 0), cache_hit=False,
+                mode="surrogate-mo",
+                attempts=list(meta.get("attempts") or ()) or None))
+
+    for r in range(explorer.round, stop_at):
+        xq = explorer.ask()
+        ctxs = [Context({"round": r, "slot": s,
+                         "x": tuple(float(v) for v in xq[s])})
+                for s in range(q)]
+        ys: List[Optional[tuple]] = [None] * q
+        if environment is None:
+            for s in range(q):
+                a_t0 = time.monotonic()
+                out = task.run(ctxs[s])
+                ys[s] = out["y"]
+                note(r, s, ctxs[s], {"t0": a_t0, "retries": 0,
+                                     "wall_s": time.monotonic() - a_t0})
+        else:
+            import concurrent.futures as cf
+            cap = max_inflight or max(
+                2, getattr(environment, "total_capacity", 2))
+            queue = list(range(q))            # qEHVI-gain order
+            inflight: dict = {}
+            while queue or inflight:
+                while queue and len(inflight) < cap:
+                    s = queue.pop(0)
+                    inflight[environment.submit_async(task, ctxs[s])] = s
+                done_set, _ = cf.wait(
+                    list(inflight), return_when=cf.FIRST_COMPLETED)
+                for f in done_set:
+                    s = inflight.pop(f)
+                    out, meta = f.result()
+                    ys[s] = out["y"]
+                    note(r, s, ctxs[s], meta)
+        explorer.tell(xq, np.asarray(ys, np.float32))
+        if checkpoint_dir is not None and (
+                explorer.round % checkpoint_every == 0
+                or explorer.round in (stop_at, n_rounds)):
+            checkpoint.save(checkpoint_dir, explorer.round,
+                            explorer.state_arrays(), blocking=True)
+            checkpoint.prune(checkpoint_dir, keep=2)
+        if progress:
+            progress(explorer.round, n_rounds)
+
+    wall = time.monotonic() - t0
+    if explorer.round < n_rounds:
+        return MOSurrogateResult(
+            genomes=None, objectives=None, front_genomes=None,
+            front_objectives=None, hv=None, rounds_done=explorer.round,
+            rounds_total=n_rounds, resumed_rounds=resumed,
+            interrupted=True, attempts=attempts, wall_s=wall)
+    fg, fo = explorer.front()
+    if cfg.ref_point is not None:
+        ref = cfg.ref_point
+    else:
+        # observed nadir + 10% span; the floor keeps the box non-degenerate
+        # when an objective saturates (constant across the whole history)
+        nadir = explorer.y.max(axis=0)
+        span = np.maximum(np.ptp(explorer.y, axis=0),
+                          1e-3 * np.maximum(np.abs(nadir), 1.0))
+        ref = tuple(float(v) for v in nadir + 0.1 * span)
+    hv = hv_estimate(fo, ref, seed=cfg.seed) if len(fo) else 0.0
+    return MOSurrogateResult(
+        genomes=explorer._lo + explorer.x01 * explorer._span,
+        objectives=explorer.y.copy(), front_genomes=fg,
+        front_objectives=fo, hv=hv, rounds_done=explorer.round,
+        rounds_total=n_rounds, resumed_rounds=resumed, interrupted=False,
+        attempts=attempts, wall_s=wall)

@@ -73,6 +73,15 @@ class SurrogateConfig:
     ucb_beta: exploration weight of q-UCB.
     acquisition: "qei" or "qucb".
     seed: master seed — the whole trajectory is a pure function of it.
+    n_max_exact: largest history the dense O(n^3) fit handles; beyond it
+        ``gp_fit`` routes to the archive-scale path (explore/bigfit.py).
+        The default sits above every pre-existing usage, so small-N runs
+        are byte-for-byte unchanged.
+    big_method: "inducing" (SGPR, incremental tell) or "ensemble"
+        (local experts, refit per round).
+    n_inducing: inducing-set size m of the SGPR path.
+    expert_size / n_experts_predict: local-ensemble cell size and how
+        many nearest experts merge at prediction.
     """
     bounds: Tuple[Tuple[float, float], ...]
     kernel: str = "matern52"
@@ -88,6 +97,11 @@ class SurrogateConfig:
     ucb_beta: float = 2.0
     acquisition: str = "qei"
     seed: int = 0
+    n_max_exact: int = 1024
+    big_method: str = "inducing"
+    n_inducing: int = 512
+    expert_size: int = 512
+    n_experts_predict: int = 4
 
     @property
     def dim(self) -> int:
@@ -119,12 +133,21 @@ class GPState(NamedTuple):
 # ---------------------------------------------------------------------------
 # GP core
 # ---------------------------------------------------------------------------
-def gp_fit(cfg: SurrogateConfig, x, y) -> GPState:
+def gp_fit(cfg: SurrogateConfig, x, y):
     """Fit the GP on unit-cube x (n, d) and raw y (n,): standardize y,
     sweep the lengthscale grid by exact negative log marginal likelihood
     (one vmapped Cholesky per grid point over ONE fused distance matrix),
     and factor the winner. jit-able; PSD is maintained by `noise+jitter`
-    on the diagonal."""
+    on the diagonal.
+
+    Histories beyond ``cfg.n_max_exact`` route to the archive-scale path
+    (:mod:`repro.explore.bigfit`: SGPR inducing points or a local-GP
+    ensemble) and return its state type; the dense branch below is
+    untouched for small N, so existing trajectories stay bit-exact. The
+    branch is on a static shape, so it resolves at trace time under jit."""
+    from repro.explore import bigfit
+    if x.shape[0] > cfg.n_max_exact:
+        return bigfit.fit_big(cfg, x, y)
     n = x.shape[0]
     y_mean = y.mean()
     y_std = jnp.maximum(y.std(), 1e-8)
@@ -153,10 +176,11 @@ def gp_fit(cfg: SurrogateConfig, x, y) -> GPState:
                    lengthscale=ls, best=ys.min())
 
 
-def gp_posterior(cfg: SurrogateConfig, state: GPState, xq):
+def gp_posterior(cfg: SurrogateConfig, state, xq):
     """Joint posterior of the batch xq (m, d) in standardized units:
     mean (m,) and full covariance (m, m) (symmetrized, for the batch
-    acquisition's Cholesky).
+    acquisition's Cholesky). Dispatches on the fitted state's type, so
+    the acquisition machinery is oblivious to which fit produced it.
 
     Cross-covariances here assemble through ``ref.gp_sqdist_ref`` directly
     (not the ops-gated kernel): the acquisition optimizer differentiates
@@ -164,6 +188,11 @@ def gp_posterior(cfg: SurrogateConfig, state: GPState, xq):
     rules — while the m x n cross blocks are small. The big N x N train
     assembly in :func:`gp_fit` is where the fused kernel runs. Both paths
     are the same ops, so posteriors stay bit-identical either way."""
+    from repro.explore import bigfit
+    if isinstance(state, bigfit.InducingGPState):
+        return bigfit.posterior_inducing(cfg, state, xq)
+    if isinstance(state, bigfit.EnsembleGPState):
+        return bigfit.posterior_ensemble(cfg, state, xq)
     ks = kref.gp_kernel_fn(cfg.kernel, kref.gp_sqdist_ref(xq, state.x),
                            state.lengthscale, 1.0)           # (m, n)
     mean = ks @ state.alpha
@@ -175,9 +204,15 @@ def gp_posterior(cfg: SurrogateConfig, state: GPState, xq):
     return mean, cov
 
 
-def gp_mean_var(cfg: SurrogateConfig, state: GPState, xq):
+def gp_mean_var(cfg: SurrogateConfig, state, xq):
     """Marginal posterior mean/variance (m,) in standardized units —
-    the cheap per-point view (re-scoring, plots, tests)."""
+    the cheap per-point view (re-scoring, plots, tests). Dispatches on
+    the state type like :func:`gp_posterior`."""
+    from repro.explore import bigfit
+    if isinstance(state, bigfit.InducingGPState):
+        return bigfit.mean_var_inducing(cfg, state, xq)
+    if isinstance(state, bigfit.EnsembleGPState):
+        return bigfit.mean_var_ensemble(cfg, state, xq)
     ks = kref.gp_kernel_fn(cfg.kernel, kref.gp_sqdist_ref(xq, state.x),
                            state.lengthscale, 1.0)
     mean = ks @ state.alpha
@@ -261,16 +296,70 @@ def propose_batch(cfg: SurrogateConfig, state: GPState, key):
     return xs[i], vals[i]
 
 
+def _fantasy_scores(cfg: SurrogateConfig, chol, hx, hy, ls, xn, yn, mn, xp):
+    """EI scores for pending candidates xp (q, d) under the posterior
+    extended with this round's landed results — the jitted, device-resident
+    replacement for the old host-side float64 rescore path. The history
+    factor ``chol`` (computed once per round by the fit) is EXTENDED by a
+    bordered rank-q block, never refactorized; landed rows are padded to q
+    with ``mn`` masking (masked rows decouple to identity — exactly zero
+    alpha, exactly zero cross-covariance), so one compiled program serves
+    every partial-arrival pattern of a round."""
+    nugget = cfg.noise + cfg.jitter
+    q, n = xn.shape[0], hx.shape[0]
+    b = kref.gp_kernel_fn(cfg.kernel, kref.gp_sqdist_ref(xn, hx),
+                          ls, 1.0) * mn[:, None]
+    l21 = jax.scipy.linalg.solve_triangular(chol, b.T, lower=True).T
+    s22 = kref.gp_kernel_fn(cfg.kernel, kref.gp_sqdist_ref(xn, xn), ls, 1.0)
+    eye_q = jnp.eye(q, dtype=jnp.float32)
+    pair = mn[:, None] * mn[None, :]
+    s22 = jnp.where(pair > 0.5, s22 + nugget * eye_q, eye_q)
+    l22 = jnp.linalg.cholesky(s22 - l21 @ l21.T)
+    lext = jnp.block([[chol, jnp.zeros((n, q), jnp.float32)], [l21, l22]])
+    cnt = n + mn.sum()
+    mean = (hy.sum() + (yn * mn).sum()) / cnt
+    var = (((hy - mean) ** 2).sum() + (mn * (yn - mean) ** 2).sum()) / cnt
+    std = jnp.maximum(jnp.sqrt(jnp.maximum(var, 0.0)), 1e-8)
+    ys = jnp.concatenate([(hy - mean) / std, mn * (yn - mean) / std])
+    alpha = jax.scipy.linalg.cho_solve((lext, True), ys)
+    ks = jnp.concatenate([
+        kref.gp_kernel_fn(cfg.kernel, kref.gp_sqdist_ref(xp, hx), ls, 1.0),
+        kref.gp_kernel_fn(cfg.kernel, kref.gp_sqdist_ref(xp, xn),
+                          ls, 1.0) * mn[None, :]], axis=1)
+    pm = ks @ alpha
+    v = jax.scipy.linalg.solve_triangular(lext, ks.T, lower=True)
+    pv = jnp.maximum(1.0 - (v * v).sum(0), cfg.jitter)
+    # min over VALID standardized observations (history may be empty in
+    # round 0 — the landed mask guarantees at least one valid entry)
+    mask_full = jnp.concatenate([jnp.ones(n, jnp.float32), mn])
+    vals = jnp.concatenate([(hy - mean) / std, (yn - mean) / std])
+    best = jnp.where(mask_full > 0.5, vals, jnp.float32(jnp.inf)).min()
+    return expected_improvement(pm, pv, best)
+
+
 @functools.lru_cache(maxsize=32)
 def _jitted(cfg: SurrogateConfig):
     """Per-config jitted engine functions. Cached on the (frozen, hashable)
     config so repeated runs — the chaos suite's clean/chaos/resume triples,
     benches — share compilations instead of re-jitting per explorer."""
+    from repro.explore import bigfit
     fit = jax.jit(functools.partial(gp_fit, cfg))
     propose = jax.jit(functools.partial(propose_batch, cfg))
     score = jax.jit(lambda st, xq: expected_improvement(
         *gp_mean_var(cfg, st, xq), st.best))
-    return fit, propose, score
+    update = jax.jit(functools.partial(bigfit.update_inducing, cfg))
+    fantasy = jax.jit(functools.partial(_fantasy_scores, cfg))
+    nugget = cfg.noise + cfg.jitter
+    hist_chol = jax.jit(lambda x, ls: jnp.linalg.cholesky(
+        kref.gp_kernel_fn(cfg.kernel, kref.gp_sqdist_ref(x, x), ls, 1.0)
+        + nugget * jnp.eye(x.shape[0], dtype=jnp.float32)))
+    def _big_score(st, x, y, m, xp):
+        st2 = bigfit.update_inducing(cfg, st, x, y, m)
+        return expected_improvement(
+            *bigfit.mean_var_inducing(cfg, st2, xp), st2.best)
+
+    big_score = jax.jit(_big_score)
+    return fit, propose, score, update, fantasy, hist_chol, big_score
 
 
 # ---------------------------------------------------------------------------
@@ -295,10 +384,15 @@ class SurrogateExplorer:
                                     cfg.seed).astype(np.float32)
         self._lo = np.asarray(cfg.lo())
         self._span = np.asarray(cfg.hi()) - self._lo
-        self._fit, self._propose, self._score = _jitted(cfg)
-        self.last_state: Optional[GPState] = None
+        (self._fit, self._propose, self._score, self._update,
+         self._fantasy, self._hist_chol, self._big_score) = _jitted(cfg)
+        self.last_state = None
         self.last_priorities: Optional[np.ndarray] = None
         self._rescore_cache = None     # ((round, ls), chol of history K)
+        # archive-scale fitted state, carried across rounds and updated
+        # incrementally in tell() (inducing path) — None until history
+        # crosses cfg.n_max_exact, and reset on resume (cold refit).
+        self._big_state = None
 
     # -------------------------------------------------------------- state io
     def state_arrays(self):
@@ -310,6 +404,11 @@ class SurrogateExplorer:
         self.x01 = np.asarray(tree["x01"], np.float32)
         self.y = np.asarray(tree["y"], np.float32)
         self.round = int(tree["round"])
+        # the big-N fitted state is NOT checkpointed: a resumed run
+        # cold-refits from the restored history (tolerance-level agreement
+        # with the uninterrupted run — see bigfit module docstring; the
+        # small-N exact path keeps its bitwise resume guarantee).
+        self._big_state = None
 
     # --------------------------------------------------------------- ask/tell
     def _round_key(self):
@@ -325,7 +424,17 @@ class SurrogateExplorer:
             self.last_priorities = np.arange(cfg.q, 0.0, -1.0,
                                              dtype=np.float32)
         else:
-            state = self._fit(jnp.asarray(self.x01), jnp.asarray(self.y))
+            if n > cfg.n_max_exact:
+                # archive scale: reuse the incrementally-updated state
+                # (tell() appends in O(m^2 q)); cold fit only when there
+                # is none yet (first crossing, resume, ensemble method)
+                if self._big_state is None:
+                    self._big_state = self._fit(jnp.asarray(self.x01),
+                                                jnp.asarray(self.y))
+                state = self._big_state
+            else:
+                state = self._fit(jnp.asarray(self.x01),
+                                  jnp.asarray(self.y))
             batch01, _ = self._propose(state, self._round_key())
             prio = np.asarray(self._score(state, batch01))
             order = np.argsort(-prio, kind="stable")
@@ -336,12 +445,22 @@ class SurrogateExplorer:
 
     def tell(self, x, y) -> None:
         """Record a completed batch (physical x (m, d), objectives y (m,)),
-        in ask order — the round barrier."""
-        x01 = (np.asarray(x, np.float32) - self._lo) / self._span
-        self.x01 = np.concatenate(
-            [self.x01, np.clip(x01, 0.0, 1.0).astype(np.float32)])
-        self.y = np.concatenate([self.y, np.asarray(y, np.float32)])
+        in ask order — the round barrier. At archive scale the fitted
+        inducing state absorbs the batch incrementally (rank-k update of
+        the running sufficient statistics) instead of waiting for the next
+        ask to refactorize."""
+        from repro.explore import bigfit
+        x01 = np.clip((np.asarray(x, np.float32) - self._lo) / self._span,
+                      0.0, 1.0).astype(np.float32)
+        ya = np.asarray(y, np.float32)
+        self.x01 = np.concatenate([self.x01, x01])
+        self.y = np.concatenate([self.y, ya])
         self.round += 1
+        if isinstance(self._big_state, bigfit.InducingGPState):
+            self._big_state = self._update(
+                self._big_state, jnp.asarray(x01), jnp.asarray(ya))
+        elif self._big_state is not None:
+            self._big_state = None   # ensemble experts: refit on next ask
 
     @property
     def best(self):
@@ -354,54 +473,62 @@ class SurrogateExplorer:
     def rescore(self, partial_x01, partial_y, pending01) -> np.ndarray:
         """OSPREY-style re-prioritization: score still-pending candidates
         (k, d) under the posterior updated with this round's partial
-        results — float64 numpy (no jit churn on ragged shapes). Affects
-        dispatch ORDER only, never what is evaluated, so chaos runs stay
-        bit-exact.
+        results — fully jitted and device-resident, float32 like the rest
+        of the fit (the old path round-tripped through host float64
+        scipy). Affects dispatch ORDER only, never what is evaluated, so
+        chaos runs stay bit-exact.
 
-        The Cholesky of the n-point *history* covariance is computed once
-        per round (cached) and extended with the round's landed rows by a
-        bordered rank-k update, so each arrival costs O(n^2 k), not a
-        fresh O(n^3) refit."""
-        import scipy.linalg
+        Exact path: the history Cholesky is taken from the round's fitted
+        state (or computed once per init round, cached) and EXTENDED with
+        the landed rows by a bordered rank-q block — O(n^2 q), never a
+        fresh O(n^3) refit. Landed and pending sets are padded to q with
+        masks, so one compiled program serves every arrival pattern of a
+        round. Archive scale: the landed rows fold into a masked
+        incremental update of the inducing statistics — O(m^2 q),
+        independent of history size."""
+        from repro.explore import bigfit
         cfg = self.cfg
-        ls = float(self.last_state.lengthscale) \
-            if self.last_state is not None \
-            else float(cfg.lengthscales[len(cfg.lengthscales) // 2])
-        hist = self.x01.astype(np.float64)
-        n = len(hist)
+        q = cfg.q
+        xn = np.zeros((q, cfg.dim), np.float32)
+        yn = np.zeros((q,), np.float32)
+        mn = np.zeros((q,), np.float32)
+        k = len(partial_x01)
+        xn[:k] = np.asarray(partial_x01, np.float32)
+        yn[:k] = np.asarray(partial_y, np.float32)
+        mn[:k] = 1.0
+        p = len(pending01)
+        xp = np.zeros((q, cfg.dim), np.float32)
+        xp[:p] = np.asarray(pending01, np.float32)
 
-        def kmat(a, b):
-            d2 = ((a[:, None, :] - b[None, :, :]) ** 2).sum(-1)
-            return np.asarray(kref.gp_kernel_fn(
-                cfg.kernel, jnp.asarray(d2), ls, 1.0))
+        if isinstance(self.last_state, bigfit.InducingGPState):
+            scores = self._big_score(self.last_state, jnp.asarray(xn),
+                                     jnp.asarray(yn), jnp.asarray(mn),
+                                     jnp.asarray(xp))
+            return np.asarray(scores)[:p]
+        if isinstance(self.last_state, bigfit.EnsembleGPState):
+            # experts would need a refit to absorb the landed rows; score
+            # under the round's posterior as-is (dispatch order only)
+            mean, var = bigfit.mean_var_ensemble(cfg, self.last_state,
+                                                 jnp.asarray(xp))
+            scores = expected_improvement(mean, var, self.last_state.best)
+            return np.asarray(scores)[:p]
 
-        nugget = cfg.noise + cfg.jitter
-        cache = self._rescore_cache
-        if cache is None or cache[0] != (self.round, ls):
-            l11 = np.linalg.cholesky(kmat(hist, hist)
-                                     + nugget * np.eye(n))
-            self._rescore_cache = cache = ((self.round, ls), l11)
-        l11 = cache[1]
-        xp = np.asarray(partial_x01, np.float64)
-        k = len(xp)
-        b = kmat(xp, hist)                                    # (k, n)
-        l21 = scipy.linalg.solve_triangular(
-            l11, b.T, lower=True).T if n else np.zeros((k, 0))
-        l22 = np.linalg.cholesky(kmat(xp, xp) + nugget * np.eye(k)
-                                 - l21 @ l21.T)
-        chol = np.block([[l11, np.zeros((n, k))], [l21, l22]])
-        x = np.concatenate([hist, xp])
-        y = np.concatenate(
-            [self.y, np.asarray(partial_y, np.float32)]).astype(np.float64)
-        mean_y, std_y = y.mean(), max(float(y.std()), 1e-8)
-        ys = (y - mean_y) / std_y
-        alpha = scipy.linalg.cho_solve((chol, True), ys)
-        ks = kmat(np.asarray(pending01, np.float64), x)
-        mean = ks @ alpha
-        v = scipy.linalg.solve_triangular(chol, ks.T, lower=True)
-        var = np.maximum(1.0 - (v * v).sum(0), cfg.jitter)
-        return np.asarray(expected_improvement(
-            jnp.asarray(mean), jnp.asarray(var), jnp.asarray(ys.min())))
+        if self.last_state is not None:
+            ls = self.last_state.lengthscale
+            chol = self.last_state.chol
+        else:
+            ls = jnp.float32(cfg.lengthscales[len(cfg.lengthscales) // 2])
+            cache = self._rescore_cache
+            if cache is None or cache[0] != (self.round, float(ls)):
+                chol = self._hist_chol(jnp.asarray(self.x01), ls)
+                self._rescore_cache = cache = ((self.round, float(ls)),
+                                               chol)
+            chol = cache[1]
+        scores = self._fantasy(chol, jnp.asarray(self.x01),
+                               jnp.asarray(self.y), ls, jnp.asarray(xn),
+                               jnp.asarray(yn), jnp.asarray(mn),
+                               jnp.asarray(xp))
+        return np.asarray(scores)[:p]
 
 
 # ---------------------------------------------------------------------------

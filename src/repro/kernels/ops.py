@@ -196,6 +196,145 @@ def gp_matrix(x1, x2, *, kind="matern52", lengthscale=0.2, variance=1.0):
                               float(variance))
 
 
+# --------------------------------------------------------------------------
+# Blocked Cholesky / triangular solve (archive-scale GP factorization)
+# --------------------------------------------------------------------------
+# Routing discipline as above: TPU kernel, CPU interpret for small grids,
+# jitted blocked oracle otherwise — all through the shared tile helpers in
+# kernels/ref.py with the same (block, block) dot shapes, so the three paths
+# are bitwise identical per (shape, block). The factor IS block-size-
+# dependent at the last bit (see the contract comment in ref.py), so these
+# wrappers take block= explicitly and default it to one pinned value.
+# The oracle route is the ENGINE route on CPU (gemm-bound left-looking
+# schedule, ~2-4x over the vmapped LAPACK grid at n=4096 — see
+# benchmarks gp_chol_4096); interpret mode exists to execute the actual
+# kernel program on small shapes so tests pin kernel == oracle bitwise.
+# The blocked grid must NOT be vmapped on CPU (measured pathological);
+# sweep lengthscale grids with a python loop under one jit instead.
+_CHOL_INTERPRET_STEPS = 64
+
+_CHOL_BLOCK = 256        # pinned default tile edge (64 * 2**j required)
+_TRSM_RHS_BLOCK = 256
+
+
+def _chol_block_ok(block: int) -> bool:
+    q, r = divmod(block, ref.CHOL_BASE)
+    return r == 0 and q >= 1 and (q & (q - 1)) == 0
+
+
+def _ceil_to(n: int, b: int) -> int:
+    return -(-n // b) * b
+
+
+_chol_blocked_ref_jit = jax.jit(
+    lambda a, block: ref.chol_blocked_ref(a, block=block),
+    static_argnums=(1,))
+
+# n stays a TRACED argument: the true count grows every tell round while
+# the padded shape only changes at block boundaries — static n would force
+# a recompile of the whole blocked program per round. gp_tile_ref uses n
+# only in integer comparisons, so traced vs baked n is float-op identical.
+_gp_chol_ref_jit = jax.jit(
+    lambda x, n, kind, lengthscale, nugget, block: ref.gp_chol_blocked_ref(
+        x, n, kind=kind, lengthscale=lengthscale, nugget=nugget,
+        block=block),
+    static_argnums=(2, 3, 4, 5))
+
+_tri_solve_ref_jit = jax.jit(
+    lambda l, b, trans, block, rhs_block: ref.tri_solve_blocked_ref(
+        l, b, trans=trans, block=block, rhs_block=rhs_block),
+    static_argnums=(2, 3, 4))
+
+
+def _chol_steps(nb: int) -> int:
+    # diag + panel + trailing grid steps across all k of the blocked sweep
+    return sum(1 + t + t * t for t in (nb - k - 1 for k in range(nb)))
+
+
+def _pad_identity(a, n_p):
+    n = a.shape[0]
+    ap = jnp.zeros((n_p, n_p), jnp.float32).at[:n, :n].set(
+        a.astype(jnp.float32))
+    if n_p > n:
+        pad_diag = jnp.concatenate([jnp.zeros(n, jnp.float32),
+                                    jnp.ones(n_p - n, jnp.float32)])
+        ap = ap + jnp.diag(pad_diag)
+    return ap
+
+
+def chol_factor(a, *, block=_CHOL_BLOCK):
+    """Lower Cholesky factor of a (n, n) SPD matrix via the blocked
+    engine; pads to a block multiple with identity (factors as
+    blkdiag(L, I)) and slices back. Bit-reproducible per (n, block)."""
+    from repro.kernels.cholesky import chol_blocked
+    assert _chol_block_ok(block), f"block must be 64*2^j, got {block}"
+    n = a.shape[0]
+    n_p = _ceil_to(n, block)
+    ap = _pad_identity(a, n_p)
+    if on_tpu():
+        return chol_blocked(ap, block=block, interpret=False)[:n, :n]
+    if _chol_steps(n_p // block) <= _CHOL_INTERPRET_STEPS \
+            and not _in_dryrun():
+        return chol_blocked(ap, block=block, interpret=True)[:n, :n]
+    return _chol_blocked_ref_jit(ap, block)[:n, :n]
+
+
+def gp_chol(x, *, kind="matern52", lengthscale=0.2, nugget=1e-4,
+            block=_CHOL_BLOCK):
+    """Fused covariance assembly + blocked Cholesky: x (n, d) unit-cube
+    points -> lower factor of [K(x, x) + nugget I]. Zero-pads x to a block
+    multiple (gp_tile_ref masks the pad to identity rows) and slices back;
+    K never exists as an unfactored (n, n) intermediate on the kernel
+    path. Callers sweeping a lengthscale grid loop this SERIALLY under one
+    jit (vmapping the blocked program is pathological on CPU)."""
+    from repro.kernels.cholesky import gp_chol_blocked
+    assert _chol_block_ok(block), f"block must be 64*2^j, got {block}"
+    n = x.shape[0]
+    n_p = _ceil_to(n, block)
+    xp = jnp.zeros((n_p, x.shape[1]), jnp.float32).at[:n].set(
+        x.astype(jnp.float32))
+    if on_tpu():
+        return gp_chol_blocked(xp, n, kind=kind, lengthscale=lengthscale,
+                               nugget=nugget, block=block,
+                               interpret=False)[:n, :n]
+    if _chol_steps(n_p // block) <= _CHOL_INTERPRET_STEPS \
+            and not _in_dryrun():
+        return gp_chol_blocked(xp, n, kind=kind, lengthscale=lengthscale,
+                               nugget=nugget, block=block,
+                               interpret=True)[:n, :n]
+    return _gp_chol_ref_jit(xp, n, kind, float(lengthscale), float(nugget),
+                            block)[:n, :n]
+
+
+def tri_solve(l, b, *, trans=False, block=_CHOL_BLOCK,
+              rhs_block=_TRSM_RHS_BLOCK):
+    """Blocked triangular solve against a lower factor: L X = B
+    (trans=False) or L^T X = B (trans=True); b (n, m) or (n,). Pads L
+    with identity and B with zeros to tile multiples, slices back."""
+    from repro.kernels.cholesky import tri_solve_blocked
+    assert _chol_block_ok(block), f"block must be 64*2^j, got {block}"
+    n = l.shape[0]
+    vec = b.ndim == 1
+    bm = b[:, None] if vec else b
+    m = bm.shape[1]
+    n_p = _ceil_to(n, block)
+    m_p = _ceil_to(m, rhs_block)
+    lp = _pad_identity(l, n_p)
+    bp = jnp.zeros((n_p, m_p), jnp.float32).at[:n, :m].set(
+        bm.astype(jnp.float32))
+    steps = (n_p // block) + (m_p // rhs_block) * (n_p // block)
+    if on_tpu():
+        xs = tri_solve_blocked(lp, bp, trans=trans, block=block,
+                               rhs_block=rhs_block, interpret=False)
+    elif steps <= _CHOL_INTERPRET_STEPS and not _in_dryrun():
+        xs = tri_solve_blocked(lp, bp, trans=trans, block=block,
+                               rhs_block=rhs_block, interpret=True)
+    else:
+        xs = _tri_solve_ref_jit(lp, bp, trans, block, rhs_block)
+    xs = xs[:n, :m]
+    return xs[:, 0] if vec else xs
+
+
 def dominance_pass(rows, cols=None, groups=None, groups_cols=None):
     """Fused single-pass sweep -> (counts (Ni,) i32, bitmap (Ni, W) u32).
     Kernel on TPU, interpret mode for small CPU grids, jnp reference

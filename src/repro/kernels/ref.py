@@ -137,6 +137,221 @@ def gp_matrix_naive_ref(x1, x2, *, kind="matern52", lengthscale=0.2,
     return gp_kernel_fn(kind, d2, lengthscale, variance)
 
 
+# ---------------------------------------------------------------------------
+# Blocked Cholesky / triangular solve (the archive-scale GP factorization)
+# ---------------------------------------------------------------------------
+# Shared tile helpers: the Pallas kernel bodies in kernels/cholesky.py and
+# the blocked jnp oracles below compute through THESE functions with THE SAME
+# tile shapes, which is the whole bitwise-equality contract (pack_words_u32 /
+# gp_sqdist_ref discipline). Two non-negotiable rules follow from how XLA
+# specializes dot-general FMA patterns per shape (see gp_sqdist_ref):
+#
+#   1. every matmul is a (block, block) x (block, block) tile dot — never a
+#      full-panel dot — so the oracle's dots have the kernel's shapes;
+#   2. trailing/accumulation updates subtract tile products one at a time in
+#      increasing tile order, so the float op sequence per element is
+#      identical between the right-looking kernel schedule and the
+#      left-looking oracle schedule (subtracting an exact 0.0 — the masked
+#      lanes of the kernel's uniform loops — is a bitwise no-op).
+#
+# Consequence: the factor is bit-reproducible per (shape, block) pair but
+# block-size-DEPENDENT at the last bit (different tile dots round
+# differently); callers pin block= where bitwise stability matters.
+
+CHOL_BASE = 64   # fori-loop base-case tile edge (all blocks are multiples)
+
+
+def chol_base_ref(a):
+    """Unblocked Cholesky–Crout of one (b, b) SPD tile, b <= CHOL_BASE.
+
+    One fori_loop step per column, all indexing via onehot masks (no
+    dynamic slicing — the same code lowers inside a Pallas kernel body):
+    pivot sqrt (guarded for the padded-identity lanes), column scale, then
+    a rank-1 outer-product downdate of the trailing submatrix."""
+    b = a.shape[0]
+    idx = jnp.arange(b)
+
+    def body(j, acc):
+        onehot = (idx == j).astype(acc.dtype)
+        ajj = (acc * onehot[None, :] * onehot[:, None]).sum()
+        d = jnp.sqrt(jnp.maximum(ajj, 1e-30))
+        col = (acc * onehot[None, :]).sum(1)
+        below = (idx > j).astype(acc.dtype)
+        lcol = jnp.where(idx > j, col / d, 0.0) + onehot * d
+        acc = acc - jnp.outer(lcol * below, lcol * below)
+        return acc * (1.0 - onehot[None, :]) + jnp.outer(lcol, onehot)
+
+    return jnp.tril(jax.lax.fori_loop(0, b, body, a))
+
+
+def tri_inv_base_ref(l):
+    """Inverse of one (b, b) lower-triangular tile by forward substitution
+    on the identity — onehot-masked fori_loop, Pallas-safe like
+    chol_base_ref. Turning the diag tile into an explicit inverse makes
+    every triangular panel solve a tile DOT (gemm-bound), not an
+    elementwise substitution sweep — the core of the blocked speedup."""
+    b = l.shape[0]
+    idx = jnp.arange(b)
+    eye = jnp.eye(b, dtype=l.dtype)
+
+    def body(i, inv):
+        onehot = (idx == i).astype(l.dtype)
+        lrow = (l * onehot[:, None]).sum(0)
+        dii = (lrow * onehot).sum()
+        partial = ((lrow * (idx < i).astype(l.dtype))[:, None] * inv).sum(0)
+        bi = (eye * onehot[:, None]).sum(0)
+        xi = (bi - partial) / dii
+        return inv * (1.0 - onehot[:, None]) + onehot[:, None] * xi[None, :]
+
+    return jax.lax.fori_loop(0, b, body, jnp.zeros_like(l))
+
+
+def chol_tile_ref(a):
+    """Factor one (block, block) diagonal tile: recursive halving down to
+    CHOL_BASE so the fori base case touches only (64, 64) tiles and
+    everything above is tile dots (the base case is elementwise-bound and
+    would dominate at block size — measured 260x slower than the dot path
+    at 512)."""
+    b = a.shape[0]
+    if b <= CHOL_BASE:
+        return chol_base_ref(a)
+    h = b // 2
+    a11, a21, a22 = a[:h, :h], a[h:, :h], a[h:, h:]
+    l11 = chol_tile_ref(a11)
+    l21 = jnp.dot(a21, tri_inv_tile_ref(l11).T)
+    l22 = chol_tile_ref(a22 - jnp.dot(l21, l21.T))
+    z = jnp.zeros((h, b - h), a.dtype)
+    return jnp.block([[l11, z], [l21, l22]])
+
+
+def tri_inv_tile_ref(l):
+    """Inverse of one (block, block) lower-triangular tile, recursive like
+    chol_tile_ref: inv([[L11, 0], [L21, L22]]) has lower-left block
+    -L22^-1 L21 L11^-1, so only the CHOL_BASE leaves substitute."""
+    b = l.shape[0]
+    if b <= CHOL_BASE:
+        return tri_inv_base_ref(l)
+    h = b // 2
+    i11 = tri_inv_tile_ref(l[:h, :h])
+    i22 = tri_inv_tile_ref(l[h:, h:])
+    z = jnp.zeros((h, b - h), l.dtype)
+    return jnp.block([[i11, z],
+                      [-jnp.dot(i22, jnp.dot(l[h:, :h], i11)), i22]])
+
+
+def gp_tile_ref(x1, x2, row0, col0, n, *, kind, lengthscale, nugget):
+    """One masked covariance tile of the fused assemble+factor path:
+    K[row0:row0+b1, col0:col0+b2] of the n-point kernel matrix with
+    ``nugget`` on the true diagonal, and the PADDED region (index >= n)
+    replaced by identity rows/columns — so the padded matrix factors as
+    blkdiag(L, I) and the pad never perturbs the valid block. Shared by
+    the Pallas assembly kernels (row0/col0 from program_id) and the
+    blocked oracle (python ints): integer masking is exact either way."""
+    k = gp_kernel_fn(kind, gp_sqdist_ref(x1, x2), lengthscale, 1.0)
+    r = row0 + jnp.arange(x1.shape[0])
+    c = col0 + jnp.arange(x2.shape[0])
+    eye = (r[:, None] == c[None, :]).astype(jnp.float32)
+    pad = (r[:, None] >= n) | (c[None, :] >= n)
+    return jnp.where(pad, eye, k + nugget * eye)
+
+
+def chol_blocked_ref(a, *, block=256):
+    """Blocked Cholesky oracle: a (n_p, n_p) f32 with n_p % block == 0 ->
+    lower L (n_p, n_p). LEFT-looking schedule — each block column is
+    computed once from already-finished columns and never updated again,
+    so the jitted oracle is pure dataflow (no in-place trailing updates
+    for XLA to copy around: this exact restructuring took the CPU engine
+    route from 4.6 s to the dot-bound regime at n=4096). Bitwise equal to
+    the right-looking Pallas kernel per the tile-dot contract above."""
+    n_p = a.shape[0]
+    nb = n_p // block
+    tiles = {(i, j): jax.lax.slice(
+        a, (i * block, j * block), ((i + 1) * block, (j + 1) * block))
+        for i in range(nb) for j in range(i + 1)}
+    return _chol_left_tiles(tiles, nb, block)
+
+
+def _chol_left_tiles(tiles, nb, block):
+    """Left-looking factor of a dict of lower tiles -> assembled (n_p, n_p)
+    L. Shared by chol_blocked_ref and gp_chol_blocked_ref."""
+    out = {}
+    for k in range(nb):
+        col = {}
+        for i in range(k, nb):
+            s = tiles[(i, k)]
+            for j in range(k):
+                s = s - jnp.dot(out[(i, j)], out[(k, j)].T)
+            col[i] = s
+        lkk = chol_tile_ref(col[k])
+        out[(k, k)] = lkk
+        if k < nb - 1:
+            linv_t = tri_inv_tile_ref(lkk).T
+            for i in range(k + 1, nb):
+                out[(i, k)] = jnp.dot(col[i], linv_t)
+    z = jnp.zeros((block, block), jnp.float32)
+    return jnp.concatenate(
+        [jnp.concatenate([out[(i, j)] if j <= i else z for j in range(nb)],
+                         axis=1) for i in range(nb)], axis=0)
+
+
+def gp_chol_blocked_ref(x, n, *, kind, lengthscale, nugget, block=256):
+    """Fused assemble+factor oracle: x (n_p, d) zero-padded unit-cube
+    inputs (n_p % block == 0, true count n) -> lower Cholesky factor of
+    [K(x, x) + nugget I] padded with identity. The covariance tiles are
+    assembled per (block, d) tile pair through gp_tile_ref exactly where
+    the factorization first touches them — K never exists as an
+    unfactored (n_p, n_p) intermediate."""
+    n_p = x.shape[0]
+    nb = n_p // block
+    xt = [jax.lax.slice(x, (i * block, 0), ((i + 1) * block, x.shape[1]))
+          for i in range(nb)]
+    tiles = {(i, j): gp_tile_ref(xt[i], xt[j], i * block, j * block, n,
+                                 kind=kind, lengthscale=lengthscale,
+                                 nugget=nugget)
+             for i in range(nb) for j in range(i + 1)}
+    return _chol_left_tiles(tiles, nb, block)
+
+
+def tri_solve_blocked_ref(l, b, *, trans=False, block=256, rhs_block=256):
+    """Blocked triangular solve oracle: L (n_p, n_p) lower (identity-padded
+    past the true size), B (n_p, m_p), n_p % block == m_p % rhs_block == 0
+    -> X with L X = B (trans=False, forward) or L^T X = B (trans=True,
+    backward). RHS columns split into independent (block, rhs_block)
+    panels — the Pallas kernel's parallel grid dimension — and row blocks
+    substitute sequentially within each; every update is a (block, block)
+    x (block, rhs_block) tile dot against the already-solved blocks plus
+    one dot with the diagonal tile's explicit inverse (tri_inv_tile_ref).
+    Gemm-bound, and bitwise the kernel's schedule: its masked uniform
+    j-loop subtracts exact zeros where this oracle subtracts nothing."""
+    n_p = l.shape[0]
+    m_p = b.shape[1]
+    nb = n_p // block
+    ncb = m_p // rhs_block
+
+    def ltile(i, j):
+        return jax.lax.slice(l, (i * block, j * block),
+                             ((i + 1) * block, (j + 1) * block))
+
+    linv = [tri_inv_tile_ref(ltile(i, i)) for i in range(nb)]
+    cols = []
+    for c in range(ncb):
+        bt = [jax.lax.slice(b, (i * block, c * rhs_block),
+                            ((i + 1) * block, (c + 1) * rhs_block))
+              for i in range(nb)]
+        xs = [None] * nb
+        order = range(nb) if not trans else range(nb - 1, -1, -1)
+        for i in order:
+            s = bt[i]
+            js = range(i) if not trans else range(i + 1, nb)
+            for j in js:
+                lij = ltile(i, j) if not trans else ltile(j, i).T
+                s = s - jnp.dot(lij, xs[j])
+            di = linv[i] if not trans else linv[i].T
+            xs[i] = jnp.dot(di, s)
+        cols.append(jnp.concatenate(xs, axis=0))
+    return jnp.concatenate(cols, axis=1)
+
+
 def nondominated_ranks_ref(objectives, valid=None):
     """Front-peeling reference for non-dominated sorting: a host-python loop
     that reruns the full O(N^2) pairwise pass once *per front* (the shape of

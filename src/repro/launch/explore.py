@@ -28,7 +28,8 @@ from repro.core.cache import hash_value
 from repro.core.scheduler import RunRecord, TaskRecord, _utcnow
 from repro.evolution import (NSGA2Config, ga, init_island_state, make_epoch,
                              pareto_front, run_islands)
-from repro.explore import SurrogateConfig, replicated_batch, run_surrogate
+from repro.explore import (MOSurrogateConfig, SurrogateConfig,
+                           replicated_batch, run_surrogate, run_surrogate_mo)
 from repro.launch.mesh import make_host_mesh
 from repro.runtime import sharding as shd
 
@@ -263,6 +264,65 @@ def calibrate_surrogate(*, reduced: bool = True, rounds: int = 8, q: int = 8,
     return res, out
 
 
+def ants_mo_eval(reduced: bool = True, replicates: int = 3):
+    """(keys (n,), genomes (n, 2)) -> (n, 3) replicated-median times to
+    deplete each food source — the paper's three calibration objectives,
+    fed raw to the multi-objective surrogate (all minimized)."""
+    ants_cfg = REDUCED if reduced else CONFIG
+    return replicated_batch(
+        lambda keys, genomes: simulate_batch(ants_cfg, keys, genomes[:, 0],
+                                             genomes[:, 1]),
+        replicates)
+
+
+def calibrate_surrogate_mo(*, reduced: bool = True, rounds: int = 8,
+                           q: int = 8, n_init: int = 16,
+                           replicates: int = 3, fault_rate: float = 0.0,
+                           out_dir: str = "/tmp/ants_surrogate_mo",
+                           printer=print):
+    """Multi-objective surrogate calibration: per-objective GPs + qEHVI
+    batches bred from the NSGA-II Pareto archive (see
+    :mod:`repro.explore.moacq`), streamed through the fault-tolerant
+    environment pool with per-round checkpoints and the same provenance
+    schema the other drivers emit."""
+    os.makedirs(out_dir, exist_ok=True)
+    cfg = MOSurrogateConfig(bounds=BOUNDS, n_objectives=3, q=q,
+                            n_init=n_init, seed=0)
+    eval_fn = ants_mo_eval(reduced, replicates)
+    record = RunRecord(workflow="ants-surrogate-mo", scheduler="ask-tell",
+                       environment="pool", started_at=_utcnow())
+    pool = make_init_pool(fault_rate)
+    t0 = time.time()
+    try:
+        res = run_surrogate_mo(
+            cfg, eval_fn, rounds=rounds, environment=pool, record=record,
+            checkpoint_dir=os.path.join(out_dir, "surrogate_checkpoints"),
+            progress=lambda r, n: printer(f"[explore] round {r}/{n}"))
+    finally:
+        pool.shutdown()
+    dt = time.time() - t0
+    printer(f"[explore] surrogate-mo: {len(res.objectives)} evaluations in "
+            f"{dt:.1f}s ({res.attempts} attempts, {res.resumed_rounds} "
+            f"rounds resumed); front {len(res.front_objectives)} points, "
+            f"hypervolume {res.hv:.3g}")
+    out = {
+        "front_genomes": np.asarray(res.front_genomes).tolist(),
+        "front_objectives": np.asarray(res.front_objectives).tolist(),
+        "hypervolume": res.hv,
+        "genomes": np.asarray(res.genomes).tolist(),
+        "objectives": np.asarray(res.objectives).tolist(),
+        "rounds": res.rounds_done,
+        "attempts": res.attempts,
+        "fault_rate": fault_rate,
+        "wall_s": dt,
+    }
+    with open(os.path.join(out_dir, "surrogate_mo_result.json"), "w") as f:
+        json.dump(out, f, indent=2)
+    record.finalize(dt)
+    record.save(os.path.join(out_dir, "provenance.json"))
+    return res, out
+
+
 def calibrate_service(*, reduced: bool = True, init_population: int = 2048,
                       init_chunk: int = 256, rounds: int = 4, q: int = 8,
                       n_init: int = 16, replicates: int = 3,
@@ -355,10 +415,14 @@ def calibrate_service(*, reduced: bool = True, init_population: int = 2048,
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--method", choices=("islands", "surrogate", "service"),
+    ap.add_argument("--method",
+                    choices=("islands", "surrogate", "surrogate-mo",
+                             "service"),
                     default="islands",
                     help="islands: fused island-model NSGA-II; surrogate: "
                          "GP + q-EI ask/tell through the environment pool; "
+                         "surrogate-mo: per-objective GPs + qEHVI batches "
+                         "bred from the Pareto archive; "
                          "service: GA init + surrogate calibration "
                          "concurrently through one shared "
                          "ExplorationService (restart-safe queue)")
@@ -400,6 +464,12 @@ def main():
                           rounds=args.rounds, q=args.q, n_init=args.n_init,
                           replicates=args.replicates,
                           fault_rate=args.fault_rate, out_dir=args.out)
+        return
+    if args.method == "surrogate-mo":
+        calibrate_surrogate_mo(reduced=args.reduced, rounds=args.rounds,
+                               q=args.q, n_init=args.n_init,
+                               replicates=args.replicates,
+                               fault_rate=args.fault_rate, out_dir=args.out)
         return
     if args.method == "surrogate":
         calibrate_surrogate(reduced=args.reduced, rounds=args.rounds,

@@ -1,0 +1,262 @@
+"""Archive-scale surrogate path (explore/bigfit.py) + qEHVI acquisition
+(explore/moacq.py): exact-vs-approximate tolerance, incremental-tell vs
+cold-refit, routing through SurrogateExplorer, and the multi-objective
+ask/tell loop with checkpoint/resume determinism."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.explore import bigfit, moacq
+from repro.explore.surrogate import (SurrogateConfig, SurrogateExplorer,
+                                     gp_fit, gp_mean_var, GPState)
+
+
+def _history(n, d=2, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.random((n, d)).astype(np.float32)
+    y = ((x[:, 0] - 0.3) ** 2 + (x[:, 1] - 0.7) ** 2
+         + 0.01 * np.sin(13 * x[:, 0])).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+def _cfg(**kw):
+    base = dict(bounds=((0.0, 1.0), (0.0, 1.0)), q=4, n_init=8, seed=0,
+                lengthscales=(0.2,))
+    base.update(kw)
+    return SurrogateConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# inducing-point path
+# ---------------------------------------------------------------------------
+def test_inducing_full_z_matches_exact_posterior():
+    """With Z = X (every point inducing) SGPR is the exact GP — mean/var
+    must agree with the dense path to f32 tolerance."""
+    cfg = _cfg(n_max_exact=4096)
+    x, y = _history(64)
+    exact = gp_fit(cfg, x, y)
+    ind = bigfit.fit_inducing(cfg, x, y, z=x, lengthscale=exact.lengthscale)
+    xq = jnp.asarray(np.random.default_rng(1).random((16, 2)), jnp.float32)
+    em, ev = gp_mean_var(cfg, exact, xq)
+    im, iv = bigfit.mean_var_inducing(cfg, ind, xq)
+    np.testing.assert_allclose(np.asarray(im), np.asarray(em),
+                               atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(iv), np.asarray(ev),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_incremental_tell_matches_cold_refit():
+    """update_inducing(q new points) == fit_inducing on the concatenated
+    history with the same pinned z and lengthscale, to tolerance (the
+    incremental path re-associates the running sums)."""
+    cfg = _cfg(n_max_exact=16, n_inducing=16)
+    x, y = _history(64, seed=3)
+    z = x[:16]
+    warm = bigfit.fit_inducing(cfg, x[:56], y[:56], z=z, lengthscale=0.2)
+    warm = bigfit.update_inducing(cfg, warm, x[56:], y[56:])
+    cold = bigfit.fit_inducing(cfg, x, y, z=z, lengthscale=0.2)
+    xq = jnp.asarray(np.random.default_rng(2).random((12, 2)), jnp.float32)
+    wm, wv = bigfit.mean_var_inducing(cfg, warm, xq)
+    cm, cv = bigfit.mean_var_inducing(cfg, cold, xq)
+    np.testing.assert_allclose(np.asarray(wm), np.asarray(cm),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(wv), np.asarray(cv),
+                               atol=1e-4, rtol=1e-4)
+    assert int(warm.count) == 64
+
+
+def test_masked_update_is_noop():
+    """A fully-masked batch must leave the posterior unchanged (the
+    rescore path feeds padded slots through this)."""
+    cfg = _cfg(n_max_exact=16, n_inducing=16)
+    x, y = _history(48, seed=5)
+    st = bigfit.fit_inducing(cfg, x, y, lengthscale=0.2)
+    xn = jnp.ones((4, 2), jnp.float32) * 0.5
+    yn = jnp.zeros((4,), jnp.float32)
+    st2 = bigfit.update_inducing(cfg, st, xn, yn,
+                                 mask=jnp.zeros((4,), jnp.float32))
+    xq = jnp.asarray(np.random.default_rng(4).random((8, 2)), jnp.float32)
+    m1, v1 = bigfit.mean_var_inducing(cfg, st, xq)
+    m2, v2 = bigfit.mean_var_inducing(cfg, st2, xq)
+    np.testing.assert_allclose(np.asarray(m2), np.asarray(m1), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(v2), np.asarray(v1), atol=1e-6)
+    assert int(st2.count) == int(st.count)
+
+
+# ---------------------------------------------------------------------------
+# local-GP ensemble path
+# ---------------------------------------------------------------------------
+def test_ensemble_single_expert_matches_exact():
+    cfg = _cfg(n_max_exact=4096, expert_size=64, n_experts_predict=1)
+    x, y = _history(48, seed=7)
+    exact = gp_fit(cfg, x, y)
+    ens = bigfit.fit_ensemble(cfg, x, y, lengthscale=exact.lengthscale)
+    xq = jnp.asarray(np.random.default_rng(3).random((10, 2)), jnp.float32)
+    em, ev = gp_mean_var(cfg, exact, xq)
+    gm, gv = bigfit.mean_var_ensemble(cfg, ens, xq)
+    np.testing.assert_allclose(np.asarray(gm), np.asarray(em),
+                               atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(gv), np.asarray(ev),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_ensemble_multi_expert_finite_and_routed():
+    cfg = _cfg(n_max_exact=32, big_method="ensemble", expert_size=16,
+               n_experts_predict=2)
+    x, y = _history(100, seed=9)
+    st = gp_fit(cfg, x, y)                       # routes via fit_big
+    assert isinstance(st, bigfit.EnsembleGPState)
+    xq = jnp.asarray(np.random.default_rng(5).random((6, 2)), jnp.float32)
+    m, v = gp_mean_var(cfg, st, xq)
+    assert np.isfinite(np.asarray(m)).all()
+    assert (np.asarray(v) > 0).all()
+
+
+def test_fit_big_unknown_method_raises():
+    cfg = _cfg(big_method="nope")
+    x, y = _history(8)
+    with pytest.raises(ValueError, match="unknown big_method"):
+        bigfit.fit_big(cfg, x, y)
+
+
+# ---------------------------------------------------------------------------
+# explorer routing: small-N exact path untouched, big-N incremental
+# ---------------------------------------------------------------------------
+def test_explorer_small_n_stays_exact():
+    cfg = _cfg()
+    ex = SurrogateExplorer(cfg)
+    x, y = _history(16, seed=11)
+    ex.load_state_arrays({"x01": np.asarray(x), "y": np.asarray(y),
+                          "round": np.int32(4)})
+    xq = ex.ask()
+    assert xq.shape == (cfg.q, 2)
+    assert ex._big_state is None                 # dense route only
+    assert isinstance(ex.last_state, GPState)
+
+
+def test_explorer_big_n_routes_and_tells_incrementally():
+    cfg = _cfg(n_max_exact=32, n_inducing=16)
+    ex = SurrogateExplorer(cfg)
+    x, y = _history(48, seed=13)
+    ex.load_state_arrays({"x01": np.asarray(x), "y": np.asarray(y),
+                          "round": np.int32(12)})
+    xq = ex.ask()
+    assert isinstance(ex._big_state, bigfit.InducingGPState)
+    n_before = int(ex._big_state.count)
+    ex.tell(xq, [float(v) for v in np.linspace(0.1, 0.4, cfg.q)])
+    assert int(ex._big_state.count) == n_before + cfg.q   # no cold refit
+    # rescore on the big path: finite scores for still-pending slots
+    scores = ex.rescore(np.asarray(xq[:2], np.float32), [0.1, 0.2],
+                        np.asarray(xq[2:], np.float32))
+    assert scores.shape == (cfg.q - 2,)
+    assert np.isfinite(scores).all()
+
+
+# ---------------------------------------------------------------------------
+# qEHVI acquisition + multi-objective explorer
+# ---------------------------------------------------------------------------
+def _mo_cfg(**kw):
+    base = dict(bounds=((0.0, 1.0), (0.0, 2.0)), n_objectives=2, q=4,
+                n_init=8, mc_samples=8, hv_samples=64, pool_size=16,
+                archive_size=16, lengthscales=(0.2, 0.4), seed=3)
+    base.update(kw)
+    return moacq.MOSurrogateConfig(**base)
+
+
+def _mo_eval(keys, g):
+    f1 = g[:, 0] ** 2 + (g[:, 1] - 1.0) ** 2
+    f2 = (g[:, 0] - 1.0) ** 2 + g[:, 1] ** 2
+    return jnp.stack([f1, f2], axis=1)
+
+
+def test_qehvi_gains_nonincreasing_and_deterministic():
+    cfg = _mo_cfg()
+    rng = np.random.default_rng(0)
+    p, m = 12, 2
+    mu = jnp.asarray(rng.normal(size=(p, m)), jnp.float32)
+    var = jnp.asarray(rng.random((p, m)) * 0.1 + 0.01, jnp.float32)
+    front = jnp.asarray([[-0.5, 0.5], [0.5, -0.5]], jnp.float32)
+    pool = jnp.asarray(rng.random((p, 2)), jnp.float32)
+    key = jax.random.key(7)
+    picked, gains = moacq.qehvi_select(cfg, mu, var, front, pool, key)
+    picked2, gains2 = moacq.qehvi_select(cfg, mu, var, front, pool, key)
+    np.testing.assert_array_equal(picked, picked2)
+    np.testing.assert_array_equal(gains, gains2)
+    assert len(set(picked.tolist())) == cfg.q    # distinct slots
+    # kriging-believer: each slot's expected gain is computed on a subset
+    # of the previous slot's alive cells, so gains decrease monotonically
+    assert all(gains[i] >= gains[i + 1] - 1e-6 for i in range(cfg.q - 1))
+
+
+def test_qehvi_prefers_nondominated_candidate():
+    cfg = _mo_cfg(q=1, mc_samples=16, hv_samples=256)
+    mu = jnp.asarray([[-1.0, -1.0], [1.5, 1.5]], jnp.float32)
+    var = jnp.full((2, 2), 1e-4, jnp.float32)
+    front = jnp.asarray([[0.0, 0.0]], jnp.float32)
+    pool = jnp.asarray([[0.2, 0.2], [0.8, 0.8]], jnp.float32)
+    picked, gains = moacq.qehvi_select(cfg, mu, var, front, pool,
+                                       jax.random.key(1))
+    assert picked[0] == 0                        # the improving candidate
+    assert gains[0] > 0
+
+
+def test_hv_estimate_orders_fronts():
+    ref_pt = (1.0, 1.0)
+    hv_far = moacq.hv_estimate(np.asarray([[0.5, 0.5]]), ref_pt, seed=2)
+    hv_near = moacq.hv_estimate(np.asarray([[0.25, 0.25]]), ref_pt, seed=2)
+    assert 0.0 < hv_far < hv_near
+
+
+def test_mo_explorer_round_and_front():
+    cfg = _mo_cfg()
+    ex = moacq.MOSurrogateExplorer(cfg)
+    for _ in range(3):
+        xq = ex.ask()
+        assert xq.shape == (cfg.q, cfg.dim)
+        lo, hi = np.asarray(cfg.lo()), np.asarray(cfg.hi())
+        assert (xq >= lo - 1e-6).all() and (xq <= hi + 1e-6).all()
+        ex.tell(xq, np.asarray(_mo_eval(None, jnp.asarray(xq)), np.float32))
+    fg, fo = ex.front()
+    assert len(fg) == len(fo) >= 1
+    # front members are mutually non-dominated
+    for i in range(len(fo)):
+        for j in range(len(fo)):
+            if i != j:
+                assert not (np.all(fo[j] <= fo[i])
+                            and np.any(fo[j] < fo[i]))
+
+
+@pytest.mark.slow
+def test_run_surrogate_mo_resume_bit_exact(tmp_path):
+    cfg = _mo_cfg()
+    d1, d2 = str(tmp_path / "full"), str(tmp_path / "half")
+    full = moacq.run_surrogate_mo(cfg, _mo_eval, rounds=4,
+                                  checkpoint_dir=d1)
+    part = moacq.run_surrogate_mo(cfg, _mo_eval, rounds=4,
+                                  checkpoint_dir=d2, stop_after_rounds=2)
+    assert part.interrupted and part.rounds_done == 2
+    res = moacq.run_surrogate_mo(cfg, _mo_eval, rounds=4,
+                                 checkpoint_dir=d2)
+    assert res.resumed_rounds == 2 and not res.interrupted
+    np.testing.assert_array_equal(full.genomes, res.genomes)
+    np.testing.assert_array_equal(full.objectives, res.objectives)
+    assert full.hv == res.hv
+
+
+@pytest.mark.slow
+def test_run_surrogate_mo_through_pool():
+    from repro.launch.explore import make_init_pool
+    cfg = _mo_cfg()
+    pool = make_init_pool(0.2, backoff_s=0.01)
+    try:
+        res = moacq.run_surrogate_mo(cfg, _mo_eval, rounds=3,
+                                     environment=pool)
+    finally:
+        pool.shutdown()
+    ref = moacq.run_surrogate_mo(cfg, _mo_eval, rounds=3)
+    # pure tasks: the pool's dispatch interleave and injected faults never
+    # change values
+    np.testing.assert_array_equal(res.genomes, ref.genomes)
+    np.testing.assert_array_equal(res.objectives, ref.objectives)

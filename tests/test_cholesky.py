@@ -1,0 +1,195 @@
+"""Blocked Cholesky / triangular-solve engine: Pallas (interpret=True)
+vs the jitted jnp oracles, under the bitwise-equality contract of
+kernels/ref.py — plus numerical sanity vs LAPACK/scipy and the gated
+``kernels.ops`` routes on unpadded shapes."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.kernels.cholesky import (chol_blocked, gp_chol_blocked,
+                                    tri_solve_blocked)
+
+
+def _spd(n_p, seed=0, n=None):
+    """Random SPD (n_p, n_p) f32, identity-padded past the true size n."""
+    n = n_p if n is None else n
+    a = jax.random.normal(jax.random.key(seed), (n, n), jnp.float32)
+    k = a @ a.T / n + jnp.eye(n, dtype=jnp.float32)
+    out = jnp.eye(n_p, dtype=jnp.float32)
+    return out.at[:n, :n].set(k)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_chol_ref(block):
+    return jax.jit(lambda a: ref.chol_blocked_ref(a, block=block))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_gp_ref(n, kind, ls, nugget, block):
+    return jax.jit(lambda x: ref.gp_chol_blocked_ref(
+        x, n, kind=kind, lengthscale=ls, nugget=nugget, block=block))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_trsm_ref(trans, block, rhs_block):
+    return jax.jit(lambda l, b: ref.tri_solve_blocked_ref(
+        l, b, trans=trans, block=block, rhs_block=rhs_block))
+
+
+# ---------------------------------------------------------------------------
+# deterministic tier: kernel == oracle bitwise, oracle ~= LAPACK/scipy
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n_p,block", [(128, 64), (256, 64), (256, 128)])
+def test_chol_kernel_matches_oracle_bitwise(n_p, block):
+    a = _spd(n_p, seed=n_p + block)
+    got = chol_blocked(a, block=block, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(_jit_chol_ref(block)(a)))
+
+
+def test_chol_oracle_matches_lapack():
+    a = _spd(256, seed=3)
+    got = np.asarray(_jit_chol_ref(64)(a))
+    expect = np.asarray(jnp.linalg.cholesky(a))
+    np.testing.assert_allclose(got, expect, atol=2e-5, rtol=2e-5)
+
+
+def test_chol_factor_is_block_dependent_but_reconstructs():
+    """The factor is pinned per (n, block) — different blocks may differ
+    in the last bit but both reconstruct A to f32 tolerance."""
+    a = _spd(256, seed=9)
+    l64 = np.asarray(_jit_chol_ref(64)(a))
+    l128 = np.asarray(_jit_chol_ref(128)(a))
+    for l in (l64, l128):
+        np.testing.assert_allclose(l @ l.T, np.asarray(a),
+                                   atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("n", [83, 96, 128])      # prime, sub-tile-even, full
+def test_gp_chol_fused_kernel_bitwise_and_pad_identity(n):
+    n_p, block = 128, 64
+    x = jnp.zeros((n_p, 3), jnp.float32).at[:n].set(
+        jax.random.uniform(jax.random.key(n), (n, 3), jnp.float32))
+    got = np.asarray(gp_chol_blocked(x, n, kind="matern52", lengthscale=0.2,
+                                     nugget=1e-4, block=block,
+                                     interpret=True))
+    expect = np.asarray(
+        _jit_gp_ref(n, "matern52", 0.2, 1e-4, block)(x))
+    np.testing.assert_array_equal(got, expect)
+    # identity-padding invariant: rows past n factor as exactly I
+    np.testing.assert_array_equal(got[n:, n:], np.eye(n_p - n))
+    np.testing.assert_array_equal(got[n:, :n], 0.0)
+    # and the factor reconstructs K + nugget I on the live block
+    k = np.asarray(ref.gp_matrix_ref(x[:n], x[:n], kind="matern52",
+                                     lengthscale=0.2)) + 1e-4 * np.eye(n)
+    np.testing.assert_allclose(got[:n, :n] @ got[:n, :n].T, k,
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("trans", [False, True])
+@pytest.mark.parametrize("m_p", [64, 128])
+def test_trsm_kernel_bitwise_and_correct(trans, m_p):
+    n_p, block, rhs_block = 192, 64, 64
+    l = _jit_chol_ref(block)(_spd(n_p, seed=5))
+    b = jax.random.normal(jax.random.key(11), (n_p, m_p), jnp.float32)
+    got = tri_solve_blocked(l, b, trans=trans, block=block,
+                            rhs_block=rhs_block, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(got),
+        np.asarray(_jit_trsm_ref(trans, block, rhs_block)(l, b)))
+    expect = jax.scipy.linalg.solve_triangular(
+        l.T if trans else l, b, lower=not trans)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_ops_gated_routes_unpadded():
+    """The engine entry points take raw (unpadded) shapes, pad internally,
+    and agree with dense linear algebra on the true block."""
+    n = 96
+    a = _spd(n, seed=21)
+    l = kops.chol_factor(a, block=64)
+    np.testing.assert_allclose(np.asarray(l @ l.T), np.asarray(a),
+                               atol=3e-5, rtol=3e-5)
+    x = jax.random.uniform(jax.random.key(2), (n, 4), jnp.float32)
+    lg = kops.gp_chol(x, kind="matern52", lengthscale=0.3, nugget=1e-4,
+                      block=64)
+    kg = np.asarray(ref.gp_matrix_ref(x, x, kind="matern52",
+                                      lengthscale=0.3)) + 1e-4 * np.eye(n)
+    np.testing.assert_allclose(np.asarray(lg @ lg.T), kg,
+                               atol=2e-5, rtol=2e-5)
+    # vector RHS round-trip: L (L^T z) = b  =>  z = A^{-1} b
+    b = jax.random.normal(jax.random.key(3), (n,), jnp.float32)
+    z = kops.tri_solve(l, kops.tri_solve(l, b, block=64), trans=True,
+                       block=64)
+    np.testing.assert_allclose(np.asarray(a @ z), np.asarray(b),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_ops_block_validation():
+    a = _spd(64)
+    for bad in (96, 192, 32):
+        with pytest.raises(AssertionError):
+            kops.chol_factor(a, block=bad)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis tier: shape sweep (prime N, duplicate rows, N below/above one
+# tile, D >= 2) — kernel bitwise-equal to the jitted oracle throughout
+# ---------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:                     # CI installs it; plain local
+    HAS_HYPOTHESIS = False              # runs keep the deterministic tier
+
+if HAS_HYPOTHESIS:
+    SET = dict(max_examples=12, deadline=None)
+
+    @settings(**SET)
+    @given(n=st.integers(2, 150), d=st.integers(2, 5),
+           duplicate=st.booleans(), seed=st.integers(0, 10 ** 6))
+    def test_gp_chol_shape_sweep_bitwise(n, d, duplicate, seed):
+        block = 64
+        n_p = -(-n // block) * block
+        x0 = jax.random.uniform(jax.random.key(seed), (n, d), jnp.float32)
+        if duplicate and n >= 2:
+            x0 = x0.at[n - 1].set(x0[0])       # exact duplicate row
+        x = jnp.zeros((n_p, d), jnp.float32).at[:n].set(x0)
+        got = gp_chol_blocked(x, n, kind="matern52", lengthscale=0.2,
+                              nugget=1e-4, block=block, interpret=True)
+        expect = _jit_gp_ref(n, "matern52", 0.2, 1e-4, block)(x)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
+    @settings(**SET)
+    @given(nb=st.integers(1, 3), ncb=st.integers(1, 2),
+           trans=st.booleans(), seed=st.integers(0, 10 ** 6))
+    def test_trsm_shape_sweep_bitwise(nb, ncb, trans, seed):
+        block = 64
+        n_p, m_p = nb * block, ncb * block
+        l = _jit_chol_ref(block)(_spd(n_p, seed=seed))
+        b = jax.random.normal(jax.random.key(seed + 1), (n_p, m_p),
+                              jnp.float32)
+        got = tri_solve_blocked(l, b, trans=trans, block=block,
+                                rhs_block=block, interpret=True)
+        expect = _jit_trsm_ref(trans, block, block)(l, b)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
+    @settings(**SET)
+    @given(n=st.integers(10, 130), seed=st.integers(0, 10 ** 6))
+    def test_chol_true_size_inside_padding_bitwise(n, seed):
+        """Identity-padded true size n inside the padded grid: kernel ==
+        oracle bitwise AND the pad block stays exactly identity."""
+        block = 64
+        n_p = -(-n // block) * block
+        a = _spd(n_p, seed=seed, n=n)
+        got = np.asarray(chol_blocked(a, block=block, interpret=True))
+        np.testing.assert_array_equal(got,
+                                      np.asarray(_jit_chol_ref(block)(a)))
+        np.testing.assert_array_equal(got[n:, n:], np.eye(n_p - n))
+        np.testing.assert_array_equal(got[n:, :n], 0.0)

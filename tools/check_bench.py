@@ -1,0 +1,62 @@
+#!/usr/bin/env python
+"""Bench provenance check: the committed BENCH_results.json must be real.
+
+A results file generated from a dirty tree carries a ``git_sha`` that does
+not describe the code that produced the numbers — the exact provenance
+hole the ``dirty`` flag records. This check fails CI when the committed
+artifact:
+
+- has ``dirty: true`` (generated with uncommitted changes), or
+- carries a ``git_sha`` that is unknown, or not an ancestor of HEAD
+  (stale results from an abandoned branch, or a sha that never existed).
+
+Regeneration discipline: commit the code change first, run
+``python benchmarks/run.py --json BENCH_results.json`` on the clean tree,
+then commit the results file by itself. Run from the repo root (CI does):
+
+    python tools/check_bench.py [path/to/BENCH_results.json]
+"""
+import json
+import os
+import subprocess
+import sys
+
+
+def fail(msg):
+    print(f"BENCH PROVENANCE {msg}")
+    print("[bench-check] FAIL")
+    return 1
+
+
+def check(path):
+    if not os.path.exists(path):
+        return fail(f"{path} missing")
+    with open(path) as f:
+        payload = json.load(f)
+    if payload.get("dirty", True):
+        return fail(
+            f"{path} was generated from a dirty tree (dirty: true) — "
+            "regenerate from a clean checkout of the committed code")
+    sha = payload.get("git_sha", "unknown")
+    if not sha or sha == "unknown":
+        return fail(f"{path} carries no git_sha")
+    proc = subprocess.run(
+        ["git", "merge-base", "--is-ancestor", sha, "HEAD"],
+        capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.abspath(path)) or ".")
+    if proc.returncode != 0:
+        return fail(
+            f"{path} git_sha {sha[:12]} is not an ancestor of HEAD "
+            "(stale or unknown commit) — regenerate from the current "
+            "branch")
+    n = len(payload.get("benchmarks", {}))
+    print(f"[bench-check] OK ({n} rows at {sha[:12]}, "
+          f"schema {payload.get('schema')})")
+    return 0
+
+
+if __name__ == "__main__":
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    target = sys.argv[1] if len(sys.argv) > 1 \
+        else os.path.join(root, "BENCH_results.json")
+    sys.exit(check(target))
