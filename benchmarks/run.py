@@ -15,6 +15,10 @@ Paper claims covered:
   ants_tick             the simulation workload itself (Fig 1/2 model)
   ants_eval_throughput  §4.6: "200,000 individuals evaluated in one hour"
   island_epoch          §4.6 island model end-to-end epoch
+  island_scaling        the EGI scale-out story on one host: the scanned,
+                        donated, mesh-sharded superstep vs simulated device
+                        count (forced host devices, one subprocess each),
+                        bit-exact across counts and transfer-guard-clean
   nsga2_dominance       §4.5 non-dominated sorting: the fused single-pass
                         selection engine vs the per-front peeling baseline
   nsga2_generation      §4.5 Listing 4 one generational step
@@ -173,7 +177,7 @@ def bench_nsga2_dominance(reduced=False):
     and warmed, apples to apples."""
     from repro.evolution import nsga2
     n, m = (512, 3) if reduced else (8192, 3)
-    iters = 1 if n >= 4096 else 3
+    iters = 3    # median-of-3 even at full shape: the headline x-factor row
     f = jax.random.uniform(jax.random.key(0), (n, m), jnp.float32)
     fused = jax.jit(nsga2.nondominated_ranks)
     peel = jax.jit(nsga2.nondominated_ranks_peel_while)
@@ -192,6 +196,50 @@ def bench_nsga2_dominance(reduced=False):
         f"{pairs_per_s:.2f}_Gpairs_per_s")
     row(f"nsga2_dominance_{n}_peel_baseline", us_peel,
         f"{passes}_pairwise_passes")
+
+
+def bench_island_scaling(reduced=False):
+    """Device-resident epoch scaling vs simulated device count (ROADMAP's
+    EGI scale-out story): one subprocess per forced host device count (the
+    count is fixed at jax import) runs the dominance-sweep-bound epoch as a
+    scanned, donated superstep on a ("data",) mesh and re-runs it under
+    ``jax.transfer_guard("disallow")`` — see benchmarks/island_scaling.py.
+    Digests are asserted identical across counts (multi-device epochs are
+    bit-exact vs single-device). On this 1-core host the k forced devices
+    time-share the core, so the measured wall is k serialized per-device
+    turns and ONE real device's critical path is wall/k — the derived
+    simulated speedup is t1 / (tk / k), honest about the model
+    (docs/performance.md)."""
+    shape = "reduced" if reduced else "full"
+    counts = (1, 2) if reduced else (1, 2, 4, 8)
+    child = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "island_scaling.py")
+    results = {}
+    for k in counts:
+        env = {**os.environ, "JAX_PLATFORMS": "cpu",
+               "XLA_FLAGS": f"--xla_force_host_platform_device_count={k}"}
+        r = subprocess.run([sys.executable, child, "--shape", shape],
+                           env=env, capture_output=True, text=True,
+                           timeout=1200)
+        assert r.returncode == 0, r.stdout + r.stderr
+        results[k] = json.loads(r.stdout.strip().splitlines()[-1])
+        assert results[k]["devices"] == k
+
+    digests = {res["digest"] for res in results.values()}
+    assert len(digests) == 1, \
+        f"multi-device epochs diverged from single-device: {results}"
+    t1 = float(np.median(results[1]["samples_s"]))
+    for k in counts:
+        us = Timing([s * 1e6 for s in results[k]["samples_s"]])
+        sim_speedup = t1 / ((us / 1e6) / k)
+        row(f"island_scaling_{k}dev", us,
+            f"{sim_speedup:.1f}x_simulated_speedup_vs_1dev_"
+            f"{t1 / (us / 1e6):.2f}x_raw_wall_bit_exact_True_"
+            f"transfer_guard_clean")
+        if not reduced and k == 8:
+            assert sim_speedup >= 2.5, (
+                f"8 simulated devices must reach >=2.5x simulated epoch "
+                f"speedup (got {sim_speedup:.2f}x)")
 
 
 def bench_nsga2_generation(reduced=False):
@@ -289,31 +337,43 @@ def bench_egi_200k_init(reduced=False):
         finally:
             pool.shutdown()
 
-    clean = run(0.0)
-    chaos = run(0.35)
-    bit_exact = bool(np.array_equal(clean.objectives, chaos.objectives))
+    # median-of-3 per leg (like every other row): the delegation harness
+    # wall fluctuates with thread scheduling, a single shot is noise
+    repeats = 3
+    cleans = [run(0.0) for _ in range(repeats)]
+    chaoses = [run(0.35) for _ in range(repeats)]
+    clean, chaos = cleans[0], chaoses[0]
+    bit_exact = all(
+        np.array_equal(clean.objectives, r.objectives)
+        for r in cleans[1:] + chaoses)
     assert bit_exact, "chaos run diverged from failure-free run"
 
-    ckpt = tempfile.mkdtemp(prefix="egi200k_")
-    try:
-        half = clean.chunks_total // 2
-        part = run(0.35, checkpoint_dir=ckpt, stop_after_chunks=half)
-        assert part.interrupted and part.chunks_done >= half
-        full = run(0.35, checkpoint_dir=ckpt)
-        resume_exact = bool(np.array_equal(clean.objectives,
-                                           full.objectives))
-        assert full.resumed_chunks > 0 and resume_exact, \
-            "resumed run must be bit-exact and actually resume"
-    finally:
-        shutil.rmtree(ckpt, ignore_errors=True)
+    fulls = []
+    for _ in range(repeats):
+        ckpt = tempfile.mkdtemp(prefix="egi200k_")
+        try:
+            half = clean.chunks_total // 2
+            part = run(0.35, checkpoint_dir=ckpt, stop_after_chunks=half)
+            assert part.interrupted and part.chunks_done >= half
+            fulls.append(run(0.35, checkpoint_dir=ckpt))
+        finally:
+            shutil.rmtree(ckpt, ignore_errors=True)
+    full = fulls[0]
+    resume_exact = all(np.array_equal(clean.objectives, r.objectives)
+                       for r in fulls)
+    assert all(r.resumed_chunks > 0 for r in fulls) and resume_exact, \
+        "resumed run must be bit-exact and actually resume"
 
-    row("egi_200k_init", clean.wall_s * 1e6,
-        f"{n / clean.wall_s * 3600:.0f}_evals_per_hour_failure_free_"
+    us_clean = Timing([r.wall_s * 1e6 for r in cleans])
+    us_chaos = Timing([r.wall_s * 1e6 for r in chaoses])
+    us_full = Timing([r.wall_s * 1e6 for r in fulls])
+    row("egi_200k_init", us_clean,
+        f"{n / (us_clean / 1e6) * 3600:.0f}_evals_per_hour_failure_free_"
         f"{clean.chunks_total}_chunks")
-    row("egi_200k_init_fail35", chaos.wall_s * 1e6,
-        f"{n / chaos.wall_s * 3600:.0f}_evals_per_hour_at_35pct_injected_"
-        f"failures_{chaos.attempts}_attempts_bit_exact_{bit_exact}")
-    row("egi_200k_init_resume", full.wall_s * 1e6,
+    row("egi_200k_init_fail35", us_chaos,
+        f"{n / (us_chaos / 1e6) * 3600:.0f}_evals_per_hour_at_35pct_"
+        f"injected_failures_{chaos.attempts}_attempts_bit_exact_{bit_exact}")
+    row("egi_200k_init_resume", us_full,
         f"resumed_{full.resumed_chunks}_of_{full.chunks_total}_chunks_"
         f"bit_exact_{resume_exact}")
 
@@ -647,6 +707,7 @@ BENCHES = [
     bench_ants_tick,
     bench_ants_eval_throughput,
     bench_island_epoch,
+    bench_island_scaling,
     bench_nsga2_dominance,
     bench_nsga2_generation,
     bench_workflow_submit,

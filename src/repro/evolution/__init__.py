@@ -5,7 +5,9 @@ from repro.evolution.ga import (GAState, StreamingResult,  # noqa
                                 init_state, init_state_from_population,
                                 make_step, run_generational,
                                 select_top_streaming)
-from repro.evolution.island import (IslandState, init_island_state,  # noqa
-                                    make_epoch, make_evolve, make_merge,
-                                    make_reseed, run_islands)
+from repro.evolution.island import (IslandState, host_snapshot,  # noqa
+                                    init_island_state, make_epoch,
+                                    make_evolve, make_merge, make_reseed,
+                                    make_superstep, place_island_state,
+                                    run_islands)
 from repro.evolution.archive import Archive, init_archive, merge, pareto_front  # noqa

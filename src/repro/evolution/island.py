@@ -22,8 +22,17 @@ semantics: islands never wait for the global archive to catch up.
 EGI's asynchronous merges become (pipelined) bulk-synchronous epochs; K
 controls the sync/async trade-off. Stragglers cannot exist inside an epoch
 (fixed step count, SPMD); node loss is handled by checkpointing (archive +
-island states) at every epoch boundary — losing an epoch loses only K steps
-of those islands' work, the paper's own failure semantics.
+island states) at superstep boundaries — losing a superstep loses only that
+many epochs of those islands' work, the paper's own failure semantics.
+
+Device residency: the synchronous driver runs *supersteps* — K epochs fused
+into one `jax.lax.scan` inside one jitted, buffer-donating call — so the hot
+path performs zero host transfers. Checkpoint snapshots are harvested
+asynchronously at superstep boundaries (`copy_to_host_async` + independent
+host buffers, so the next donated dispatch can reuse the device memory), and
+`init_island_state` commits island-axis leaves to the active mesh with
+explicit NamedShardings at birth (`place_island_state`): populations are
+sharded before the first epoch rather than resharded inside it.
 """
 from __future__ import annotations
 
@@ -32,11 +41,12 @@ from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.evolution import ga, nsga2
 from repro.evolution.archive import Archive, init_archive, merge
 from repro.evolution.nsga2 import NSGA2Config
-from repro.runtime.sharding import constrain
+from repro.runtime.sharding import active_mesh, constrain, logical_to_spec
 
 
 class IslandState(NamedTuple):
@@ -46,25 +56,67 @@ class IslandState(NamedTuple):
     total_evaluations: jnp.ndarray
 
 
+def _is_key(x) -> bool:
+    return jnp.issubdtype(getattr(x, "dtype", None), jax.dtypes.prng_key)
+
+
 def _constrain_islands(istate: ga.GAState) -> ga.GAState:
-    """Pin the island axis to the data/pod mesh axes."""
+    """Pin the island axis to the data/pod mesh axes.
+
+    Typed PRNG key leaves are skipped: GSPMD on jax 0.4.x cannot validate a
+    leading-axis sharding against the key dtype's hidden trailing (2,) data
+    dims inside scanned bodies (tile-assignment rank mismatch on u32[n, 2]).
+    The keys are (n_islands,)-tiny; they ride along replicated."""
     def c(x):
-        if x.ndim >= 1:
+        if x.ndim >= 1 and not _is_key(x):
             return constrain(x, ("island",) + (None,) * (x.ndim - 1))
         return x
     return jax.tree.map(c, istate)
+
+
+def place_island_state(state: IslandState, mesh=None) -> IslandState:
+    """Commit `state` to the mesh with explicit NamedShardings: island-axis
+    leaves shard over the island mesh axes, the archive and scalars
+    replicate. Without this, fresh inits and checkpoint resumes arrive
+    replicated (or host-committed) and the first epoch pays a reshard.
+    No-op without a mesh or on abstract values (eval_shape tracing)."""
+    mesh = mesh or active_mesh()
+    if mesh is None:
+        return state
+    leaves = jax.tree.leaves(state)
+    if any(isinstance(x, jax.core.Tracer) for x in leaves):
+        return state
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    replicated = NamedSharding(mesh, PartitionSpec())
+
+    def put_island(x):
+        if x.ndim < 1 or _is_key(x):   # keys replicate: see _constrain_islands
+            return jax.device_put(x, replicated)
+        spec = logical_to_spec(("island",) + (None,) * (x.ndim - 1),
+                               x.shape, mesh)
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return IslandState(
+        islands=jax.tree.map(put_island, state.islands),
+        archive=jax.tree.map(lambda x: jax.device_put(x, replicated),
+                             state.archive),
+        epoch=jax.device_put(state.epoch, replicated),
+        total_evaluations=jax.device_put(state.total_evaluations, replicated),
+    )
 
 
 def init_island_state(cfg: NSGA2Config, key, *, n_islands: int,
                       archive_size: int) -> IslandState:
     keys = jax.random.split(key, n_islands)
     islands = jax.vmap(lambda k: ga.init_state(cfg, k))(keys)
-    return IslandState(
+    state = IslandState(
         islands=islands,
         archive=init_archive(archive_size, cfg.genome_dim, cfg.n_objectives),
         epoch=jnp.int32(0),
         total_evaluations=jnp.int32(0),
     )
+    return place_island_state(state)
 
 
 # ---------------------------------------------------------------------------
@@ -200,14 +252,61 @@ def make_epoch(cfg: NSGA2Config, eval_fn: Callable, *, lam: int,
     return epoch
 
 
+def make_superstep(cfg: NSGA2Config, eval_fn: Callable, *, lam: int,
+                   steps_per_epoch: int, reseed_frac: float = 0.5,
+                   merge_top_k: int = 0) -> Callable:
+    """Returns superstep(state, k) -> state: k epochs fused into ONE device
+    program via `jax.lax.scan` over the bulk-synchronous epoch. jit it with
+    k static (`static_argnums=1`) and the state donated (`donate_argnums=0`)
+    and the evolve→merge→reseed chain runs k epochs with in-place buffers
+    and zero host transfers — the device-resident hot path."""
+    epoch = make_epoch(cfg, eval_fn, lam=lam, steps_per_epoch=steps_per_epoch,
+                       reseed_frac=reseed_frac, merge_top_k=merge_top_k)
+
+    def superstep(state: IslandState, k: int) -> IslandState:
+        state, _ = jax.lax.scan(lambda s, _: (epoch(s), None), state, None,
+                                length=k)
+        return state
+
+    return superstep
+
+
+def host_snapshot(state: IslandState) -> IslandState:
+    """An independent host-side copy of `state` for checkpointing: the live
+    device buffers may be donated to the next superstep immediately after.
+    Array leaves land as numpy (`copy_to_host_async` first, so the D2H
+    copies overlap instead of serializing); typed PRNG keys round-trip
+    through `key_data` into a fresh buffer sharing nothing with the donated
+    state."""
+    for leaf in jax.tree.leaves(state):
+        if hasattr(leaf, "copy_to_host_async"):
+            leaf.copy_to_host_async()
+
+    def f(x):
+        if _is_key(x):
+            return jax.random.wrap_key_data(
+                np.asarray(jax.random.key_data(x)))
+        return np.asarray(x)
+
+    return jax.tree.map(f, state)
+
+
 def run_islands(cfg: NSGA2Config, eval_fn, key, *, n_islands: int,
                 lam: int, steps_per_epoch: int, epochs: int,
                 archive_size: int = 1024, checkpoint_fn=None,
-                merge_top_k: int = 0, pipeline: bool = False,
+                merge_top_k: int = 0, reseed_frac: float = 0.5,
+                pipeline: bool = False, epochs_per_superstep: int = 0,
                 start_state: IslandState = None) -> IslandState:
-    """Host loop over epochs (the checkpoint/restart boundary).
+    """Host loop over supersteps (the checkpoint/restart boundary).
 
-    pipeline=False: bulk-synchronous epochs (one fused device program each).
+    pipeline=False: supersteps — `epochs_per_superstep` epochs scanned into
+    one jitted, donated device program each (`make_superstep`); the host
+    only dispatches and harvests checkpoint snapshots at the boundaries.
+    The snapshot of superstep s is flushed to `checkpoint_fn` *after*
+    superstep s+1 has been dispatched, so disk I/O overlaps device compute.
+    epochs_per_superstep=0 picks the natural grain: every remaining epoch
+    in one program when there is no checkpoint_fn, else 1 (per-epoch
+    checkpoints, the historical contract).
     pipeline=True: the double-buffered schedule — merge of epoch k and evolve
     of epoch k+1 are dispatched back-to-back with no data dependency between
     them (the reseed feeding evolve k+1 reads the archive of epoch k-1), so
@@ -216,24 +315,40 @@ def run_islands(cfg: NSGA2Config, eval_fn, key, *, n_islands: int,
     has every epoch merged."""
     state = start_state if start_state is not None else init_island_state(
         cfg, key, n_islands=n_islands, archive_size=archive_size)
+    state = place_island_state(state)
     e0 = int(state.epoch)
     if e0 >= epochs:
         return state
 
     if not pipeline:
-        epoch = jax.jit(make_epoch(cfg, eval_fn, lam=lam,
-                                   steps_per_epoch=steps_per_epoch,
-                                   merge_top_k=merge_top_k))
-        for e in range(e0, epochs):
-            state = epoch(state)
+        sstep = make_superstep(cfg, eval_fn, lam=lam,
+                               steps_per_epoch=steps_per_epoch,
+                               reseed_frac=reseed_frac,
+                               merge_top_k=merge_top_k)
+        donating = jax.jit(sstep, static_argnums=1, donate_argnums=0)
+        # a caller-held start_state must survive the run (resume replays
+        # checkpoint snapshots): its superstep runs without donation, every
+        # state we created ourselves is donated.
+        fn = jax.jit(sstep, static_argnums=1) if start_state is not None \
+            else donating
+        grain = epochs_per_superstep or (
+            1 if checkpoint_fn is not None else epochs - e0)
+        pending = None
+        for s in range(e0, epochs, grain):
+            state = fn(state, min(grain, epochs - s))
+            fn = donating
             if checkpoint_fn is not None:
-                checkpoint_fn(state)
+                if pending is not None:
+                    checkpoint_fn(pending)   # flush overlaps device compute
+                pending = host_snapshot(state)
+        if pending is not None:
+            checkpoint_fn(pending)
         return state
 
     evolve = jax.jit(make_evolve(cfg, eval_fn, lam=lam,
                                  steps_per_epoch=steps_per_epoch))
     merge_islands = jax.jit(make_merge(cfg, merge_top_k=merge_top_k))
-    reseed_islands = jax.jit(make_reseed(cfg))
+    reseed_islands = jax.jit(make_reseed(cfg, reseed_frac=reseed_frac))
     n_i = state.islands.genomes.shape[0]     # honour start_state's count
     per_epoch = n_i * steps_per_epoch * lam
     archive = state.archive

@@ -30,7 +30,8 @@ from repro.evolution import (NSGA2Config, ga, init_island_state, make_epoch,
                              pareto_front, run_islands)
 from repro.explore import (MOSurrogateConfig, SurrogateConfig,
                            replicated_batch, run_surrogate, run_surrogate_mo)
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import init_distributed, make_host_mesh, \
+    make_island_mesh
 from repro.runtime import sharding as shd
 
 
@@ -54,7 +55,8 @@ def calibrate(*, reduced: bool = True, n_islands: int = 8, mu: int = 16,
               lam: int = 16, steps_per_epoch: int = 4, epochs: int = 5,
               replicates: int = 5, archive_size: int = 256,
               merge_top_k: int = 8, out_dir: str = "/tmp/ants", mesh=None,
-              pipeline: bool = False, init_population: int = 0,
+              pipeline: bool = False, reseed_frac: float = 0.5,
+              epochs_per_superstep: int = 0, init_population: int = 0,
               init_chunk: int = 2048, fault_rate: float = 0.0,
               printer=print):
     ants_cfg = REDUCED if reduced else CONFIG
@@ -167,7 +169,8 @@ def calibrate(*, reduced: bool = True, n_islands: int = 8, mu: int = 16,
             ga_cfg, eval_fn, jax.random.key(0), n_islands=n_islands, lam=lam,
             steps_per_epoch=steps_per_epoch, epochs=epochs,
             archive_size=archive_size, checkpoint_fn=on_epoch,
-            merge_top_k=min(merge_top_k, mu), pipeline=pipeline,
+            merge_top_k=min(merge_top_k, mu), reseed_frac=reseed_frac,
+            pipeline=pipeline, epochs_per_superstep=epochs_per_superstep,
             start_state=start)
     dt = time.time() - t0
     evals = int(state.total_evaluations)
@@ -437,6 +440,26 @@ def main():
                     help="double-buffer epochs: evaluation of epoch k+1 "
                          "overlaps archive selection of epoch k (reseed "
                          "reads a one-epoch-stale archive, EGI-style)")
+    ap.add_argument("--reseed-frac", type=float, default=0.5,
+                    help="fraction of each island population replaced by "
+                         "archive samples at every epoch boundary")
+    ap.add_argument("--superstep", type=int, default=0,
+                    help="epochs fused into one scanned, buffer-donating "
+                         "device program between checkpoints (0 = auto: "
+                         "1 per checkpoint, all epochs when uncheckpointed)")
+    ap.add_argument("--mesh", default="",
+                    help="island mesh spec: 'data=N' or 'pod=P,data=N' "
+                         "(0 = all devices); default: every local/global "
+                         "device on a 1D data axis")
+    ap.add_argument("--distributed", action="store_true",
+                    help="call jax.distributed.initialize before building "
+                         "the mesh (multi-process/multi-host SPMD; combine "
+                         "with --coordinator/--num-processes/--process-id "
+                         "or the standard cluster env vars)")
+    ap.add_argument("--coordinator", default=None,
+                    help="coordinator address host:port for --distributed")
+    ap.add_argument("--num-processes", type=int, default=None)
+    ap.add_argument("--process-id", type=int, default=None)
     ap.add_argument("--init-population", type=int, default=0,
                     help="evaluate a large initial population (the paper's "
                          "200000) through the fault-tolerant environment "
@@ -457,6 +480,16 @@ def main():
     ap.add_argument("--acquisition", choices=("qei", "qucb"), default="qei")
     ap.add_argument("--out", default="/tmp/ants")
     args = ap.parse_args()
+    if args.distributed or args.num_processes or args.coordinator:
+        init_distributed(coordinator=args.coordinator,
+                         num_processes=args.num_processes,
+                         process_id=args.process_id,
+                         force=args.distributed)
+    mesh = None
+    if args.mesh:
+        spec = dict(kv.split("=") for kv in args.mesh.split(","))
+        mesh = make_island_mesh(pod=int(spec.get("pod", 1)),
+                                data=int(spec.get("data", 0)))
     if args.method == "service":
         calibrate_service(reduced=args.reduced,
                           init_population=args.init_population or 2048,
@@ -480,8 +513,10 @@ def main():
         return
     calibrate(reduced=args.reduced, n_islands=args.islands, mu=args.mu,
               lam=args.lam, steps_per_epoch=args.steps_per_epoch,
-              epochs=args.epochs, replicates=args.replicates,
-              pipeline=args.pipeline, init_population=args.init_population,
+              epochs=args.epochs, replicates=args.replicates, mesh=mesh,
+              pipeline=args.pipeline, reseed_frac=args.reseed_frac,
+              epochs_per_superstep=args.superstep,
+              init_population=args.init_population,
               init_chunk=args.init_chunk, fault_rate=args.fault_rate,
               out_dir=args.out)
 

@@ -193,21 +193,34 @@ def sharded_dominance_pass(objectives, groups=None):
       under the same sharding.
 
     Drop-in ``pass_fn`` for evolution.nsga2.nondominated_ranks; falls back to
-    the single-device fused kernel when no real mesh is active, the sweep
-    axes are trivial, or N does not split evenly.
+    the single-device fused kernel only when no real mesh is active or the
+    sweep axes are trivial. Arbitrary N shards: each shard's row block must
+    be 32-aligned for the bitmap words, so N pads up to the next
+    ``n_shards*32`` multiple with +BIG sentinel rows (group -1) — sentinels
+    never strictly dominate and never set a bitmap bit on a real row, the
+    same trick the fused kernel plays for indivisible N — and the outputs
+    slice back to N.
     """
     from repro.kernels import ops as kops   # deferred: keep import DAG thin
+    from repro.kernels.dominance import BIG, _ceil_to
 
     mesh = active_mesh()
     n = objectives.shape[0]
     axes = _sweep_axes(mesh)
     n_shards = math.prod(mesh.shape[a] for a in axes) if axes else 1
-    # each shard's row block must also stay 32-aligned for the bitmap words
-    if n_shards <= 1 or n % (n_shards * 32) or objectives.ndim != 2:
+    if n_shards <= 1 or objectives.ndim != 2:
         return kops.dominance_pass(objectives, groups=groups)
 
     from jax.experimental.shard_map import shard_map
-    g = groups if groups is not None else jnp.zeros((n,), jnp.int32)
+    g = (groups if groups is not None
+         else jnp.zeros((n,), jnp.int32)).astype(jnp.int32)
+    n_p = _ceil_to(n, n_shards * 32)
+    if n_p != n:
+        pad = n_p - n
+        objectives = jnp.concatenate(
+            [objectives,
+             jnp.full((pad, objectives.shape[1]), BIG, objectives.dtype)])
+        g = jnp.concatenate([g, jnp.full((pad,), -1, jnp.int32)])
 
     def sweep(rows, cols, g_rows, g_cols):
         cnt, bm = kops.dominance_pass(rows, cols, groups=g_rows[:, 0],
@@ -215,7 +228,7 @@ def sharded_dominance_pass(objectives, groups=None):
         shard = jnp.int32(0)
         for a in axes:
             shard = shard * mesh.shape[a] + jax.lax.axis_index(a)
-        full = jnp.zeros((n,), jnp.int32)
+        full = jnp.zeros((n_p,), jnp.int32)
         full = jax.lax.dynamic_update_slice(full, cnt,
                                             (shard * rows.shape[0],))
         return jax.lax.psum(full, axes), bm
@@ -226,5 +239,10 @@ def sharded_dominance_pass(objectives, groups=None):
         out_specs=(P(None), P(axes, None)),
         check_rep=False,
     )
-    g2 = g.astype(jnp.int32)[:, None]
-    return fn(objectives, objectives, g2, g2)
+    g2 = g[:, None]
+    cnt, bm = fn(objectives, objectives, g2, g2)
+    if n_p != n:
+        # sentinel columns land in the sliced-off words (or as always-zero
+        # bits of the last kept word); sentinel rows are dropped outright
+        cnt, bm = cnt[:n], bm[:n, :_ceil_to(n, 32) // 32]
+    return cnt, bm
