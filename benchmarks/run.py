@@ -50,6 +50,11 @@ Paper claims covered:
                         on the ants model (plus proposals/s of the warm
                         ask path)
   lm_train_step         the 2026-scale "expensive task" (reduced smollm)
+  bandit_router_throughput  live traffic as the experiment: requests/s
+                        through the UCB router over competing serving
+                        arms vs direct generation on a pinned arm, with
+                        the cumulative-regret breakdown (sublinear growth
+                        asserted at full shapes) in the JSON row
 """
 from __future__ import annotations
 
@@ -97,7 +102,10 @@ def timeit(fn, *, warmup=2, iters=5):
     return Timing(samples)
 
 
-def row(name, us, derived):
+def row(name, us, derived, **extra):
+    """Record one result row. ``extra`` keys land in the JSON entry as-is
+    (structured metrics a derived-string can't carry — e.g. the bandit
+    row's regret breakdown, which tools/check_bench.py validates)."""
     print(f"{name},{us:.1f},{derived}")
     entry = {"us_per_call": round(float(us), 1), "derived": derived}
     if isinstance(us, Timing):
@@ -106,6 +114,7 @@ def row(name, us, derived):
         entry["max_us"] = round(max(us.samples), 1)
     else:
         entry["repeats"] = 1
+    entry.update(extra)
     RESULTS[name] = entry
 
 
@@ -703,6 +712,62 @@ def bench_lm_train_step(reduced=False):
         f"{b * s / (us / 1e6):.0f}_tokens_per_s_single_CPU_core")
 
 
+def bench_bandit_router(reduced=False):
+    """Bandit-allocated serving: requests/s through the UCB router over
+    three competing arms (greedy / temperature / int8) vs the same request
+    stream pinned directly to one arm, plus the cumulative regret of the
+    routing. Full shapes assert router throughput >= 0.9x direct and
+    sublinear regret (second-half per-request regret below first-half)."""
+    import numpy as np
+    from repro.launch.bandit_serve import make_arm_set
+    from repro.serve import BanditConfig, BanditRouter, token_diversity
+
+    requests, b, s, new = (10, 2, 8, 8) if reduced else (64, 4, 16, 24)
+    cfg, arms, _spawn = make_arm_set("smollm-135m", reduced=True,
+                                     new_tokens=new)
+
+    def prompts_at(req):
+        rng = np.random.default_rng((7 << 20) + req)
+        return rng.integers(0, cfg.vocab_size, (b, s)).astype(np.int32)
+
+    key = jax.random.key(7)
+    for a in arms:                       # compile every arm outside timing
+        a.generate_fn(prompts_at(0), key)
+
+    t0 = time.perf_counter()             # no-router baseline: pin arm 0
+    for r in range(requests):
+        arms[0].generate_fn(prompts_at(r), jax.random.fold_in(key, r))
+    direct_rps = requests / (time.perf_counter() - t0)
+
+    for a in arms:
+        a.stats = type(a.stats)()        # forget the warmup/baseline pulls
+    router = BanditRouter(arms, BanditConfig(policy="ucb", ucb_c=0.5,
+                                             seed=7),
+                          quality_fn=token_diversity)
+    t0 = time.perf_counter()
+    for r in range(requests):
+        router.route(prompts_at(r))
+    wall = time.perf_counter() - t0
+    rps = requests / wall
+    ratio = rps / direct_rps
+
+    regret = router.regret_curve()
+    h = len(regret) // 2
+    first = float(regret[h - 1]) / h
+    second = float(regret[-1] - regret[h - 1]) / (len(regret) - h)
+    if not reduced:
+        assert ratio >= 0.9, f"router {ratio:.3f}x direct (< 0.9x)"
+        assert second < first, (
+            f"regret not sublinear: {second:.4f}/req second half vs "
+            f"{first:.4f}/req first half")
+    row("bandit_router_throughput", wall / requests * 1e6,
+        f"{rps:.1f}_req_per_s_{ratio:.2f}x_vs_direct",
+        regret={"cumulative": round(float(regret[-1]), 4),
+                "per_request_first_half": round(first, 4),
+                "per_request_second_half": round(second, 4),
+                "oracle_arm": router.oracle_arm()})
+
+
 BENCHES = [
     bench_ants_tick,
     bench_ants_eval_throughput,
@@ -719,6 +784,7 @@ BENCHES = [
     bench_surrogate_bigN,
     bench_surrogate_ants,
     bench_lm_train_step,
+    bench_bandit_router,
 ]
 
 

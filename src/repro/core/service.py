@@ -139,6 +139,20 @@ class ExplorationService:
         """Re-rank an experiment's pending firings (higher = sooner)."""
         return self.queue.update_priorities(experiment_id, priorities)
 
+    def submit_and_wait(self, experiment_id: str, task: Task,
+                        context: Context, *, priority: float = 0.0,
+                        timeout: Optional[float] = None
+                        ) -> Tuple[str, Context]:
+        """Submit ONE firing and block for its output — the per-request
+        path of live-serving tenants (serve/bandit.py): enqueue under
+        ``priority``, wait, return ``(task_id, output)``. Terminal failure
+        raises RuntimeError; the journal/cache idempotence story is
+        identical to :meth:`submit_tasks`."""
+        [tid] = self.submit_tasks(experiment_id, [(task, context)],
+                                  priority=priority)
+        out = self.wait(experiment_id, [tid], timeout=timeout)[tid]
+        return tid, out
+
     # --------------------------------------------------------------- workers
     def _worker(self) -> None:
         while True:

@@ -470,6 +470,28 @@ class SurrogateExplorer:
         i = int(np.argmin(self.y))
         return self._lo + self.x01[i] * self._span, float(self.y[i])
 
+    def predict(self, x):
+        """Posterior ``(mean, std)`` at physical ``x`` (m, d), in RAW
+        objective units — the query surface consumers outside the ask/tell
+        loop use (the bandit serving layer culls arms by posterior mean,
+        docs/serving.md). Reuses the round's fitted state when ``ask()``
+        produced one; otherwise fits on the told history (cached jit).
+        Works on every state type (dense / inducing / ensemble): all carry
+        the standardization scalars."""
+        if len(self.y) < 2:
+            raise ValueError("predict() needs >= 2 told observations")
+        x01 = np.clip(
+            (np.asarray(x, np.float32).reshape(-1, self.cfg.dim) - self._lo)
+            / self._span, 0.0, 1.0).astype(np.float32)
+        state = self.last_state
+        if state is None:
+            state = self._fit(jnp.asarray(self.x01), jnp.asarray(self.y))
+        mean, var = gp_mean_var(self.cfg, state, jnp.asarray(x01))
+        y_std = float(state.y_std)
+        mean = np.asarray(mean, np.float64) * y_std + float(state.y_mean)
+        std = np.sqrt(np.maximum(np.asarray(var, np.float64), 0.0)) * y_std
+        return mean, std
+
     def rescore(self, partial_x01, partial_y, pending01) -> np.ndarray:
         """OSPREY-style re-prioritization: score still-pending candidates
         (k, d) under the posterior updated with this round's partial

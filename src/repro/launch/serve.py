@@ -2,6 +2,13 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
         --batch 4 --prompt-len 16 --new-tokens 24
+
+Throughput is reported from a WARM step: the first ``generate`` pays
+tracing + XLA compilation and is reported separately as the cold number.
+The old driver folded compile time into its single tok/s figure, which
+made the figure meaningless as a reward signal — the bandit router
+(launch/bandit_serve.py) allocates traffic on per-token latency, so the
+steady-state number has to be honest.
 """
 from __future__ import annotations
 
@@ -21,6 +28,9 @@ from repro.serve import ServeConfig, generate
 def serve_once(arch: str, *, reduced=True, batch=4, prompt_len=16,
                new_tokens=24, temperature=0.0, dtype="float32",
                printer=print):
+    """One cold + one warm batched generation. Returns ``(tokens, stats)``
+    where stats carries both throughputs: ``tok_s_warm`` (steady state,
+    the honest serving number) and ``tok_s_cold`` (incl. compile)."""
     cfg = dataclasses.replace(get_config(arch, reduced=reduced), dtype=dtype,
                               use_flash_kernel=False)
     model = build(cfg)
@@ -34,12 +44,19 @@ def serve_once(arch: str, *, reduced=True, batch=4, prompt_len=16,
             size=(batch, cfg.encoder_seq_len, cfg.d_model)).astype(np.float32))
     sc = ServeConfig(max_new_tokens=new_tokens, temperature=temperature)
     t0 = time.time()
+    generate(model, params, prompts, sc, frames=frames).block_until_ready()
+    cold_s = time.time() - t0
+    t0 = time.time()
     out = generate(model, params, prompts, sc, frames=frames)
     out.block_until_ready()
-    dt = time.time() - t0
-    printer(f"[serve] {arch}: {batch}x{new_tokens} tokens in {dt:.2f}s "
-            f"({batch * new_tokens / dt:.1f} tok/s incl. compile)")
-    return np.asarray(out)
+    warm_s = time.time() - t0
+    stats = {"cold_s": cold_s, "warm_s": warm_s,
+             "tok_s_warm": batch * new_tokens / warm_s,
+             "tok_s_cold": batch * new_tokens / cold_s}
+    printer(f"[serve] {arch}: {batch}x{new_tokens} tokens in {warm_s:.2f}s "
+            f"warm ({stats['tok_s_warm']:.1f} tok/s; cold {cold_s:.2f}s "
+            f"incl. compile, {stats['tok_s_cold']:.1f} tok/s)")
+    return np.asarray(out), stats
 
 
 def main():
@@ -51,9 +68,10 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=24)
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
-    out = serve_once(args.arch, reduced=args.reduced, batch=args.batch,
-                     prompt_len=args.prompt_len, new_tokens=args.new_tokens,
-                     temperature=args.temperature)
+    out, _stats = serve_once(args.arch, reduced=args.reduced,
+                             batch=args.batch, prompt_len=args.prompt_len,
+                             new_tokens=args.new_tokens,
+                             temperature=args.temperature)
     print(out)
 
 

@@ -1,1 +1,5 @@
-from repro.serve.engine import ServeConfig, generate, make_decode_step, make_prefill_step  # noqa
+from repro.serve.engine import (ServeConfig, generate, make_decode_step,  # noqa
+                                make_prefill_step, sample_token)
+from repro.serve.bandit import (ARM_BOUNDS, Arm, ArmStats, BanditConfig,  # noqa
+                                BanditRouter, RouteResult, make_model_arm,
+                                quantize_params_int8, token_diversity)

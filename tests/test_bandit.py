@@ -1,0 +1,239 @@
+"""Bandit-allocated serving: deterministic arm allocation, journal replay
+after a simulated driver kill, the surrogate spawn/cull loop, and the chaos
+tier proving routing stays bit-exact through a 35%-failure service pool.
+
+Everything here runs in the bit-reproducible regime the router documents:
+``lat_weight=0`` plus a deterministic quality proxy makes the whole routing
+trajectory a pure function of (seed, arm outputs), so a replayed or
+chaos-executed run can be compared token-for-token and pull-for-pull.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.serve import (Arm, BanditConfig, BanditRouter, token_diversity)
+
+
+def _const_arm(name, fill, *, n=8, genome=None):
+    """Arm emitting a fixed (B, n) token block — diversity-scored rewards
+    are then exact constants, so routing is fully deterministic."""
+    def gen(prompts, key, _fill=fill, _n=n):
+        b = np.asarray(prompts).shape[0]
+        if _fill == "ramp":                      # every token unique: 1.0
+            return np.tile(np.arange(_n, dtype=np.int32), (b, 1))
+        return np.full((b, _n), _fill, np.int32)  # all equal: 1/n
+    return Arm(name, gen, genome=genome)
+
+
+def _router(cfg, journal=None, spawn_fn=None, service=None):
+    arms = [_const_arm("low", 0, genome=np.array([0.0, 0.0], np.float32)),
+            _const_arm("mid", 1, n=4,
+                       genome=np.array([0.4, 0.0], np.float32)),
+            _const_arm("high", "ramp",
+                       genome=np.array([0.8, 0.0], np.float32))]
+    return BanditRouter(arms, cfg, quality_fn=token_diversity,
+                        journal=journal, spawn_fn=spawn_fn, service=service)
+
+
+PROMPTS = np.zeros((2, 4), np.int32)
+
+
+# ---------------------------------------------------------------------------
+# allocation policies
+# ---------------------------------------------------------------------------
+def test_epsilon_zero_is_pure_exploit():
+    r = _router(BanditConfig(policy="epsilon", epsilon=0.0, lat_weight=0.0))
+    for _ in range(20):
+        r.route(PROMPTS)
+    stats = r.arm_stats()
+    # warm start pulls each arm once; epsilon=0 then exploits "high" only
+    assert stats["high"]["pulls"] == 18
+    assert stats["low"]["pulls"] == 1 and stats["mid"]["pulls"] == 1
+    assert r.oracle_arm() == "high"
+
+
+def test_epsilon_positive_keeps_exploring():
+    r = _router(BanditConfig(policy="epsilon", epsilon=0.5, lat_weight=0.0,
+                             seed=3))
+    for _ in range(40):
+        r.route(PROMPTS)
+    pulls = {n: s["pulls"] for n, s in r.arm_stats().items()}
+    assert pulls["high"] > pulls["low"]          # still mostly exploits
+    assert pulls["low"] + pulls["mid"] > 2       # but explores past warmup
+
+
+def test_ucb_bound_ordering():
+    r = _router(BanditConfig(policy="ucb", ucb_c=2.0, lat_weight=0.0))
+    # same mean, fewer pulls => wider confidence => larger bound
+    r.arms[0].stats.pulls, r.arms[0].stats.reward_sum = 10, 10.0
+    r.arms[1].stats.pulls, r.arms[1].stats.reward_sum = 2, 2.0
+    t = 12
+    assert r.ucb_bound(1, t) > r.ucb_bound(0, t)
+    # same pulls, higher mean => larger bound
+    r.arms[1].stats.pulls, r.arms[1].stats.reward_sum = 10, 15.0
+    assert r.ucb_bound(1, 20) > r.ucb_bound(0, 20)
+    # an unpulled arm always wins the bound
+    assert r.ucb_bound(2, 20) == float("inf")
+
+
+def test_ucb_converges_to_best_arm():
+    r = _router(BanditConfig(policy="ucb", ucb_c=0.5, lat_weight=0.0))
+    for _ in range(30):
+        r.route(PROMPTS)
+    pulls = {n: s["pulls"] for n, s in r.arm_stats().items()}
+    assert pulls["high"] > pulls["low"] and pulls["high"] > pulls["mid"]
+    regret = r.regret_curve()
+    h = len(regret) // 2
+    assert regret[-1] - regret[h - 1] <= regret[h - 1]  # sublinear halves
+
+
+def test_routing_is_deterministic():
+    cfg = BanditConfig(policy="epsilon", epsilon=0.3, lat_weight=0.0, seed=9)
+    a, b = _router(cfg), _router(cfg)
+    for _ in range(25):
+        a.route(PROMPTS)
+        b.route(PROMPTS)
+    assert [n for n, _ in a.history] == [n for n, _ in b.history]
+    assert a.history == b.history
+
+
+# ---------------------------------------------------------------------------
+# journal replay
+# ---------------------------------------------------------------------------
+def test_journal_replay_restores_stats_after_kill(tmp_path):
+    path = str(tmp_path / "rewards.jsonl")
+    cfg = BanditConfig(policy="ucb", ucb_c=0.5, lat_weight=0.0)
+
+    killed = _router(cfg, journal=path)
+    for _ in range(9):
+        killed.route(PROMPTS)
+    before = killed.arm_stats()
+    # simulated driver kill: no close(); plus a torn tail write
+    with open(path, "a") as f:
+        f.write('{"op": "pull", "req": 99, "ar')
+
+    revived = _router(cfg, journal=path)
+    assert revived.n_requests == 9               # torn line ignored
+    after = revived.arm_stats()
+    for name in before:
+        assert after[name]["pulls"] == before[name]["pulls"]
+        assert after[name]["mean_reward"] == \
+            pytest.approx(before[name]["mean_reward"])
+
+    # the continuation matches an uninterrupted run pull-for-pull
+    for _ in range(9):
+        revived.route(PROMPTS)
+    revived.close()
+    straight = _router(cfg)
+    for _ in range(18):
+        straight.route(PROMPTS)
+    assert [n for n, _ in revived.history] == \
+        [n for n, _ in straight.history]
+    assert revived.arm_stats() == straight.arm_stats()
+
+
+def test_journal_replay_rebuilds_spawned_arms(tmp_path):
+    path = str(tmp_path / "rewards.jsonl")
+
+    def spawn_fn(genome):
+        return _const_arm("spawned", "ramp", n=6,
+                          genome=np.asarray(genome, np.float32))
+
+    cfg = BanditConfig(policy="epsilon", epsilon=0.0, lat_weight=0.0)
+    r = _router(cfg, journal=path, spawn_fn=spawn_fn)
+    for _ in range(3):
+        r.route(PROMPTS)
+    # hand-journal a spawn + cull the way sync_surrogate does
+    r._log({"op": "spawn", "arm": "gp-arm", "genome": [0.9, 0.0]})
+    r._log({"op": "cull", "arm": "low"})
+    r.close()
+
+    revived = _router(cfg, journal=path, spawn_fn=spawn_fn)
+    names = [a.name for a in revived.arms]
+    assert "gp-arm" in names                     # rebuilt via spawn_fn
+    assert "low" not in [revived.arms[i].name for i in revived.active()]
+    revived.close()
+
+
+# ---------------------------------------------------------------------------
+# surrogate loop
+# ---------------------------------------------------------------------------
+def test_sync_surrogate_spawns_and_culls(tmp_path):
+    from repro.explore import SurrogateConfig, SurrogateExplorer
+    path = str(tmp_path / "rewards.jsonl")
+    spawned_genomes = []
+
+    def spawn_fn(genome):
+        spawned_genomes.append(np.asarray(genome, np.float32))
+        return _const_arm(f"gp{len(spawned_genomes)}", "ramp", n=6,
+                          genome=np.asarray(genome, np.float32))
+
+    r = _router(BanditConfig(policy="epsilon", epsilon=0.0, lat_weight=0.0),
+                journal=path, spawn_fn=spawn_fn)
+    for _ in range(6):
+        r.route(PROMPTS)
+    explorer = SurrogateExplorer(SurrogateConfig(
+        bounds=((0.0, 1.2), (0.0, 1.0)), q=1, n_init=2, seed=0,
+        lengthscales=(0.3,), n_starts=4, opt_steps=8, mc_samples=16))
+    new_arm = r.sync_surrogate(explorer)
+    assert new_arm is not None and new_arm in r.arms
+    # worst arm by posterior mean ("low": lowest reward) is culled
+    active_names = [r.arms[i].name for i in r.active()]
+    assert "low" not in active_names
+    assert len(active_names) >= 2                # never below min_arms
+    r.close()
+
+    ops = [json.loads(l)["op"] for l in open(path) if l.strip()]
+    assert "spawn" in ops and "cull" in ops
+
+
+def test_sync_surrogate_needs_two_armed_arms():
+    from repro.explore import SurrogateConfig, SurrogateExplorer
+    arms = [_const_arm("only", "ramp",
+                       genome=np.array([0.5, 0.0], np.float32)),
+            _const_arm("nogenome", 0)]
+    r = BanditRouter(arms, BanditConfig(lat_weight=0.0),
+                     quality_fn=token_diversity)
+    r.route(PROMPTS)
+    r.route(PROMPTS)
+    explorer = SurrogateExplorer(SurrogateConfig(
+        bounds=((0.0, 1.2), (0.0, 1.0)), q=1, n_init=2, seed=0))
+    assert r.sync_surrogate(explorer) is None    # one genome-arm: no-op
+
+
+# ---------------------------------------------------------------------------
+# chaos tier: routing through the fault-injected service pool
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_routing_bit_exact_under_35pct_failures(tmp_path):
+    """The full stack: every request fires as a journaled service task on a
+    pool injecting 35% per-attempt failures. Fault tolerance (resubmission)
+    must make the routing trajectory and every token bit-exact vs the
+    clean inline run."""
+    from repro.core import ExplorationService
+    from repro.launch.explore import make_init_pool
+
+    cfg = BanditConfig(policy="ucb", ucb_c=0.5, lat_weight=0.0, seed=5)
+    n = 14
+
+    clean = _router(cfg)
+    clean_tokens = [clean.route(PROMPTS).tokens for _ in range(n)]
+
+    pool = make_init_pool(0.35, backoff_s=0.01, retries=12)
+    service = ExplorationService(
+        pool, journal=str(tmp_path / "queue.jsonl"), name="bandit-test")
+    try:
+        chaos = _router(cfg, service=service)
+        chaos_tokens = [chaos.route(PROMPTS).tokens for _ in range(n)]
+    finally:
+        service.shutdown()
+        pool.shutdown()
+
+    assert pool.stats.snapshot()["failed_attempts"] > 0  # chaos really hit
+    assert [nm for nm, _ in chaos.history] == \
+        [nm for nm, _ in clean.history]
+    assert chaos.history == clean.history        # rewards bit-exact too
+    for a, b in zip(clean_tokens, chaos_tokens):
+        np.testing.assert_array_equal(a, b)

@@ -8,7 +8,9 @@ artifact:
 
 - has ``dirty: true`` (generated with uncommitted changes), or
 - carries a ``git_sha`` that is unknown, or not an ancestor of HEAD
-  (stale results from an abandoned branch, or a sha that never existed).
+  (stale results from an abandoned branch, or a sha that never existed), or
+- has a ``bandit_router_throughput`` row missing its structured ``regret``
+  breakdown (cumulative / per-request halves / oracle arm).
 
 Regeneration discipline: commit the code change first, run
 ``python benchmarks/run.py --json BENCH_results.json`` on the clean tree,
@@ -49,7 +51,26 @@ def check(path):
             f"{path} git_sha {sha[:12]} is not an ancestor of HEAD "
             "(stale or unknown commit) — regenerate from the current "
             "branch")
-    n = len(payload.get("benchmarks", {}))
+    benchmarks = payload.get("benchmarks", {})
+    bandit = benchmarks.get("bandit_router_throughput")
+    if bandit is not None:
+        # the serving row must carry its structured regret breakdown —
+        # a throughput number without the regret story is not the claim
+        regret = bandit.get("regret")
+        if not isinstance(regret, dict):
+            return fail(
+                f"{path} bandit_router_throughput has no regret dict")
+        for k in ("cumulative", "per_request_first_half",
+                  "per_request_second_half"):
+            if not isinstance(regret.get(k), (int, float)):
+                return fail(
+                    f"{path} bandit_router_throughput regret[{k!r}] "
+                    "missing or non-numeric")
+        if not regret.get("oracle_arm"):
+            return fail(
+                f"{path} bandit_router_throughput regret has no "
+                "oracle_arm")
+    n = len(benchmarks)
     print(f"[bench-check] OK ({n} rows at {sha[:12]}, "
           f"schema {payload.get('schema')})")
     return 0
