@@ -52,7 +52,8 @@ Paper claims covered:
   lm_train_step         the 2026-scale "expensive task" (reduced smollm)
   bandit_router_throughput  live traffic as the experiment: requests/s
                         through the UCB router over competing serving
-                        arms vs direct generation on a pinned arm, with
+                        arms vs direct generation pinned to the oracle
+                        arm (router overhead, not arm-mix compute), with
                         the cumulative-regret breakdown (sublinear growth
                         asserted at full shapes) in the JSON row
 """
@@ -714,10 +715,15 @@ def bench_lm_train_step(reduced=False):
 
 def bench_bandit_router(reduced=False):
     """Bandit-allocated serving: requests/s through the UCB router over
-    three competing arms (greedy / temperature / int8) vs the same request
-    stream pinned directly to one arm, plus the cumulative regret of the
-    routing. Full shapes assert router throughput >= 0.9x direct and
-    sublinear regret (second-half per-request regret below first-half)."""
+    three competing arms (greedy / temperature / int8) vs the no-router
+    baseline — the same request stream pinned directly to the oracle arm
+    (best fixed arm in hindsight, i.e. the arm the router converges to;
+    pinning a DIFFERENT arm would conflate router overhead with the
+    arms' own compute differences, which the reward already prices).
+    Full shapes assert router throughput >= 0.9x direct and sublinear
+    regret (second-half per-request regret below first-half). Both
+    passes are median-of-3: each is only a fraction of a second of wall
+    clock, too noisy for a single-shot ratio."""
     import numpy as np
     from repro.launch.bandit_serve import make_arm_set
     from repro.serve import BanditConfig, BanditRouter, token_diversity
@@ -734,22 +740,28 @@ def bench_bandit_router(reduced=False):
     for a in arms:                       # compile every arm outside timing
         a.generate_fn(prompts_at(0), key)
 
-    t0 = time.perf_counter()             # no-router baseline: pin arm 0
-    for r in range(requests):
-        arms[0].generate_fn(prompts_at(r), jax.random.fold_in(key, r))
-    direct_rps = requests / (time.perf_counter() - t0)
+    router = None
 
-    for a in arms:
-        a.stats = type(a.stats)()        # forget the warmup/baseline pulls
-    router = BanditRouter(arms, BanditConfig(policy="ucb", ucb_c=0.5,
-                                             seed=7),
-                          quality_fn=token_diversity)
-    t0 = time.perf_counter()
-    for r in range(requests):
-        router.route(prompts_at(r))
-    wall = time.perf_counter() - t0
-    rps = requests / wall
-    ratio = rps / direct_rps
+    def routed_pass():
+        nonlocal router
+        for a in arms:
+            a.stats = type(a.stats)()    # fresh bandit state per repeat
+        router = BanditRouter(arms, BanditConfig(policy="ucb", ucb_c=0.5,
+                                                 seed=7),
+                              quality_fn=token_diversity)
+        for r in range(requests):
+            router.route(prompts_at(r))
+
+    router_us = timeit(routed_pass, warmup=1, iters=3)
+    oracle = next(a for a in arms if a.name == router.oracle_arm())
+
+    def direct_pass():
+        for r in range(requests):
+            oracle.generate_fn(prompts_at(r), jax.random.fold_in(key, r))
+
+    direct_us = timeit(direct_pass, warmup=1, iters=3)
+    rps = requests / (float(router_us) / 1e6)
+    ratio = float(direct_us) / float(router_us)
 
     regret = router.regret_curve()
     h = len(regret) // 2
@@ -760,8 +772,8 @@ def bench_bandit_router(reduced=False):
         assert second < first, (
             f"regret not sublinear: {second:.4f}/req second half vs "
             f"{first:.4f}/req first half")
-    row("bandit_router_throughput", wall / requests * 1e6,
-        f"{rps:.1f}_req_per_s_{ratio:.2f}x_vs_direct",
+    row("bandit_router_throughput", router_us.scaled(1 / requests),
+        f"{rps:.1f}_req_per_s_{ratio:.2f}x_vs_direct_oracle",
         regret={"cumulative": round(float(regret[-1]), 4),
                 "per_request_first_half": round(first, 4),
                 "per_request_second_half": round(second, 4),
