@@ -1,0 +1,103 @@
+"""Child process for the egi_200k_init_{k}dev bench rows (benchmarks/run.py
+spawns one per simulated device count — XLA's forced host device count is
+fixed at jax import, so every count needs a fresh process):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        python benchmarks/egi_scaling.py --shape full
+
+Streams the paper's 200k-individual GA init through an EnvironmentPool of
+DeviceEnvironment members — one member per forced device by default
+(``make_init_pool(pool_devices=k)``, the exact production path behind
+``--pool-devices``) — and prints a JSON line with the raw wall samples and
+a sha256 digest of the evaluated population. ``--threads`` runs the
+pre-existing thread-backed member pool instead (the 1-device baseline the
+device rows must stay bit-identical to). The parent asserts digests match
+across device counts and vs the thread baseline, and derives the simulated
+speedup — on this 1-core host the k forced devices time-share the core, so
+one real device's critical path is wall/k (same model as
+island_scaling.py; see docs/performance.md).
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SHAPES = {
+    # n_total, chunk — full matches bench_egi_200k_init's headline leg
+    "full": (200_000, 4096),
+    "reduced": (4096, 512),
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shape", choices=sorted(SHAPES), default="full")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--members", type=int, default=0,
+                    help="device-set members (default: one per forced "
+                         "device)")
+    ap.add_argument("--threads", action="store_true",
+                    help="thread-backed make_init_pool baseline instead of "
+                         "device members")
+    args = ap.parse_args(argv)
+
+    from repro.evolution import NSGA2Config, ga
+    from repro.launch.explore import make_init_pool
+
+    n, chunk = SHAPES[args.shape]
+    cfg = NSGA2Config(mu=16, genome_dim=2, bounds=((0., 100.), (0., 100.)),
+                      n_objectives=3)
+
+    # the ants-shaped synthetic fitness from bench_egi_200k_init: cheap
+    # enough that the rows measure the delegation harness, not the model
+    def eval_fn(keys, genomes):
+        noise = jax.vmap(lambda k: jax.random.normal(k, (3,)))(keys)
+        d, e = genomes[:, 0], genomes[:, 1]
+        return jnp.stack([(d - 30.) ** 2 + (e - 10.) ** 2,
+                          jnp.abs(d - e), d + e], 1) + 0.1 * noise
+
+    k = 0 if args.threads else (args.members or len(jax.devices()))
+
+    # Deterministic warmup: compile every (device, chunk-shape) executable
+    # before timing. Without this, whichever device the remainder-sized
+    # final chunk lands on pays its ~0.5s compile INSIDE a timed sample —
+    # a different device each iteration, so no fixed iteration count
+    # reaches steady state on its own.
+    from repro.core import Context
+    wtask = ga.make_chunk_task(cfg, eval_fn, 0)
+    for dev in jax.local_devices():
+        with jax.default_device(dev):
+            for size in sorted(set(ga.chunk_sizes(n, chunk))):
+                wtask.run(Context(chunk=0, size=size))
+
+    samples, digest = [], None
+    for _ in range(args.iters):
+        pool = make_init_pool(0.0, backoff_s=0.01, pool_devices=k)
+        try:
+            res = ga.evaluate_population_streaming(
+                cfg, eval_fn, 0, n_total=n, chunk=chunk, environment=pool)
+        finally:
+            pool.shutdown()
+        samples.append(res.wall_s)
+        h = hashlib.sha256()
+        h.update(np.asarray(res.objectives).tobytes())
+        h.update(np.asarray(res.genomes).tobytes())
+        d = h.hexdigest()
+        assert digest is None or digest == d, "repeat diverged"
+        digest = d
+    print(json.dumps({"devices": len(jax.devices()), "members": k,
+                      "shape": args.shape, "samples_s": samples,
+                      "digest": digest}))
+
+
+if __name__ == "__main__":
+    main()

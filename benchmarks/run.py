@@ -28,6 +28,11 @@ Paper claims covered:
                         fault-tolerant EnvironmentPool — throughput and
                         makespan failure-free vs >=30% injected failures
                         (bit-exact), plus mid-population kill+resume
+  egi_200k_init_{k}dev  the same streaming init delegated to DEVICE-SET
+                        pool members (make_init_pool(pool_devices=k), one
+                        DeviceEnvironment per forced device) vs simulated
+                        device count — bit-exact across counts and vs the
+                        thread-backed member baseline
   service_two_tenant    the always-on delegation layer: two concurrent
                         experiments through ONE shared pool via the
                         persistent priority task queue, bit-exact vs their
@@ -386,6 +391,56 @@ def bench_egi_200k_init(reduced=False):
     row("egi_200k_init_resume", us_full,
         f"resumed_{full.resumed_chunks}_of_{full.chunks_total}_chunks_"
         f"bit_exact_{resume_exact}")
+
+
+def bench_egi_device_scaling(reduced=False):
+    """ROADMAP open item 1, measured: the 200k streaming init through
+    DEVICE-SET pool members (``make_init_pool(pool_devices=k)``) vs
+    simulated device count — one subprocess per forced host device count
+    (fixed at jax import), see benchmarks/egi_scaling.py. Digests are
+    asserted identical across counts AND vs the pre-existing thread-backed
+    member pool at 1 device (the single-member path the device rows must
+    not change). On this 1-core host the k forced devices time-share the
+    core, so the measured wall is k serialized per-device turns and ONE
+    real device's critical path is wall/k — the derived simulated speedup
+    is t1 / (tk / k), the same honest model as island_scaling
+    (docs/performance.md)."""
+    shape = "reduced" if reduced else "full"
+    counts = (1, 2) if reduced else (1, 2, 4)
+    n_total = 4096 if reduced else 200_000
+    child = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "egi_scaling.py")
+
+    def spawn(k, extra=()):
+        env = {**os.environ, "JAX_PLATFORMS": "cpu",
+               "XLA_FLAGS": f"--xla_force_host_platform_device_count={k}"}
+        r = subprocess.run([sys.executable, child, "--shape", shape,
+                            *extra], env=env, capture_output=True,
+                           text=True, timeout=1200)
+        assert r.returncode == 0, r.stdout + r.stderr
+        res = json.loads(r.stdout.strip().splitlines()[-1])
+        assert res["devices"] == k
+        return res
+
+    results = {k: spawn(k) for k in counts}
+    baseline = spawn(1, ("--threads",))            # current thread path
+    digests = {res["digest"] for res in results.values()}
+    digests.add(baseline["digest"])
+    assert len(digests) == 1, \
+        f"device-set pools diverged from the thread-member path: {results}"
+
+    t1 = float(np.median(results[1]["samples_s"]))
+    for k in counts:
+        us = Timing([s * 1e6 for s in results[k]["samples_s"]])
+        sim_speedup = t1 / ((us / 1e6) / k)
+        row(f"egi_200k_init_{k}dev", us,
+            f"{sim_speedup:.1f}x_simulated_speedup_vs_1dev_"
+            f"{n_total / (us / 1e6) * 3600:.0f}_evals_per_hour_"
+            f"bit_exact_True")
+        if not reduced and k == 4:
+            assert sim_speedup >= 1.5, (
+                f"4 simulated devices must reach >=1.5x simulated init "
+                f"speedup (got {sim_speedup:.2f}x)")
 
 
 def bench_service_two_tenant(reduced=False):
@@ -790,6 +845,7 @@ BENCHES = [
     bench_workflow_submit,
     bench_replication_median,
     bench_egi_200k_init,
+    bench_egi_device_scaling,
     bench_service_two_tenant,
     bench_gp_covariance,
     bench_gp_chol,

@@ -8,7 +8,8 @@ from repro.core.hook import (Hook, ToStringHook, DisplayHook,      # noqa
 from repro.core.source import (Source, ConstantSource, CSVSource,  # noqa
                                FunctionSource)
 from repro.core.environment import (Environment, LocalEnvironment,  # noqa
-                                    MeshEnvironment, EGIEnvironment)
+                                    MeshEnvironment, EGIEnvironment,
+                                    DeviceEnvironment, make_device_members)
 from repro.core.envpool import EnvironmentPool, PoolStats          # noqa
 from repro.core.faults import (FaultSpec, InjectedFailure,         # noqa
                                ResultCorruption)

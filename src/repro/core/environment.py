@@ -488,6 +488,168 @@ class MeshEnvironment(Environment):
         return results
 
 
+class DeviceEnvironment(Environment):
+    """A pool member that owns a **disjoint subset of local devices**.
+
+    The paper scales the 200k streaming init by spreading pure jobs over
+    whatever compute is attached; with thread-backed members every attempt
+    still lands on jax's process-wide default device. A DeviceEnvironment
+    pins its work to its own devices instead:
+
+    * host-side attempts (``run_attempt`` — the streaming-init chunk and
+      surrogate-eval PyTasks) run under a thread-local
+      ``jax.default_device`` chosen round-robin from the member's devices,
+      so jit dispatch and PRNG ops inside the task land on this member's
+      silicon, not the global default;
+    * batched JaxTask lanes (``map_explore`` — the pool's batched-lane
+      fast path) are explicitly placed on the member's device subset with
+      a ``NamedSharding`` over a one-axis ``lane`` mesh (falling back to a
+      single member device when the lane count does not divide evenly).
+
+    All the existing knobs (``capacity``/``latency_s``/``timeout_s``/
+    ``faults``/``retries``...) apply unchanged, so device-set members slot
+    into an ``EnvironmentPool`` exactly like thread members — including
+    under chaos injection. ``capacity`` defaults to ``2 * len(devices)``
+    so each device keeps one attempt in flight while the next is queued.
+    """
+
+    def __init__(self, devices: Sequence[Any], *, capacity: Optional[int] = None,
+                 **kw):
+        devices = tuple(devices)
+        if not devices:
+            raise ValueError("DeviceEnvironment requires at least one device")
+        kw.setdefault("name", "dev[" + ",".join(
+            str(getattr(d, "id", d)) for d in devices) + "]")
+        super().__init__(capacity=(2 * len(devices) if capacity is None
+                                   else capacity), **kw)
+        self.devices = devices
+        self._rr_cursor = 0
+        # Device ids the most recent batched map_explore actually placed
+        # its lanes on (read back from the output arrays' sharding) —
+        # observability for the forced-device placement tests.
+        self.last_lane_devices: Optional[Tuple[int, ...]] = None
+
+    @property
+    def mesh(self):
+        if len(self.devices) == 1:
+            return None
+        return jax.sharding.Mesh(np.asarray(self.devices), ("lane",))
+
+    def _next_device(self):
+        """Round-robin over the member's devices (lock-protected cursor)."""
+        with self._lock:
+            d = self.devices[self._rr_cursor % len(self.devices)]
+            self._rr_cursor += 1
+        return d
+
+    def run_attempt(self, task: Task, context: Context, *, attempt: int = 0,
+                    job: Optional[str] = None,
+                    wake: Optional[threading.Event] = None
+                    ) -> Tuple[Context, Optional[str]]:
+        # jax.default_device is thread-local (verified under jax 0.4.37),
+        # so concurrent attempts on other members cannot unpin this one.
+        with jax.default_device(self._next_device()):
+            return super().run_attempt(task, context, attempt=attempt,
+                                       job=job, wake=wake)
+
+    def jit(self, fn, **kw):
+        dev = self.devices[0]
+
+        def wrapped(*args, **kwargs):
+            with jax.default_device(dev):
+                return fn(*args, **kwargs)
+
+        return jax.jit(wrapped, **kw)
+
+    def map_explore(self, task: Task, contexts: Sequence[Context]):
+        """Batched lanes explicitly placed on the member's own devices."""
+        if task.kind != "jax" or not contexts:
+            return super().map_explore(task, contexts)
+        names = sorted(contexts[0].keys())
+        for c in contexts:
+            if sorted(c.keys()) != names:
+                return super().map_explore(task, contexts)  # ragged -> host
+        try:
+            batched = {n: np.stack([np.asarray(c[n]) for c in contexts])
+                       for n in names}
+        except Exception:
+            return super().map_explore(task, contexts)
+
+        n_lanes = len(contexts)
+        devs = self.devices
+        if len(devs) > 1 and n_lanes % len(devs) == 0:
+            mesh = jax.sharding.Mesh(np.asarray(devs), ("lane",))
+            sharding = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec("lane"))
+            placed = {k: jax.device_put(v, sharding)
+                      for k, v in batched.items()}
+        else:
+            placed = {k: jax.device_put(v, self._next_device())
+                      for k, v in batched.items()}
+
+        def one(ctx):
+            return task.fn(Context(ctx))
+
+        # jit outputs follow the (committed) input sharding, so the whole
+        # batch stays on this member's subset end to end.
+        out = jax.jit(jax.vmap(one))(placed)
+        leaf = jax.tree.leaves(out)[0]
+        self.last_lane_devices = tuple(
+            sorted(d.id for d in leaf.sharding.device_set))
+        with self._lock:
+            self.stats.submitted += n_lanes
+            self.stats.completed += n_lanes
+        out_host = jax.tree.map(np.asarray, out)
+        return [task.validate_outputs({k: v[i] for k, v in out_host.items()})
+                for i in range(n_lanes)]
+
+    def __repr__(self):
+        ids = ",".join(str(getattr(d, "id", d)) for d in self.devices)
+        return f"DeviceEnvironment(devices=[{ids}])"
+
+
+def make_device_members(mesh_or_devices=None, k: int = 2, **kw):
+    """Partition the local device list into ``k`` disjoint
+    :class:`DeviceEnvironment` pool members.
+
+    Args:
+        mesh_or_devices: a ``jax.sharding.Mesh``, an explicit device
+            sequence, or None for ``jax.local_devices()``.
+        k: number of members; devices are split contiguously, remainders
+            go to the earliest members.
+        **kw: forwarded to every member (``retries``/``timeout_s``/...).
+            ``faults`` may be a callable ``i -> FaultSpec`` for per-member
+            seeds (the chaos-test idiom).
+
+    Returns:
+        A list of k DeviceEnvironments over pairwise-disjoint device sets,
+        ready for ``EnvironmentPool(members)``.
+    """
+    if mesh_or_devices is None:
+        devices = list(jax.local_devices())
+    elif hasattr(mesh_or_devices, "devices"):          # a Mesh
+        devices = list(np.asarray(mesh_or_devices.devices).ravel())
+    else:
+        devices = list(mesh_or_devices)
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    if k > len(devices):
+        raise ValueError(
+            f"cannot partition {len(devices)} device(s) into {k} members")
+    faults = kw.pop("faults", None)
+    q, r = divmod(len(devices), k)
+    members, start = [], 0
+    for i in range(k):
+        n = q + (1 if i < r else 0)
+        sub = devices[start:start + n]
+        start += n
+        f = faults(i) if callable(faults) else faults
+        ids = ",".join(str(getattr(d, "id", d)) for d in sub)
+        members.append(DeviceEnvironment(
+            sub, name=f"dev{i}[{ids}]", faults=f, **kw))
+    return members
+
+
 def EGIEnvironment(*args, **kw):
     """The paper's EGIEnvironment("biomed", ...) — on TPU infrastructure the
     closest analogue is the multi-pod mesh. Kept as an alias so paper

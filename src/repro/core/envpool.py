@@ -160,13 +160,24 @@ class EnvironmentPool:
         return sum(m.capacity for m in self.members)
 
     def member_stats(self) -> Dict[str, Dict[str, Any]]:
-        """Per-member snapshot for provenance / debugging."""
-        return {m.name: {"capacity": m.capacity,
-                         "completed": m.completed,
-                         "drain_rate": (None if m.busy_s == 0.0
-                                        else round(m.drain_rate(), 3)),
-                         **dataclasses.asdict(m.env.stats)}
-                for m in self.members}
+        """Per-member snapshot for provenance / debugging.
+
+        Taken under the pool lock AND each member's stats lock so the
+        snapshot is never torn by in-flight attempts. At quiescence every
+        pool-driven member satisfies
+        ``submitted == completed + failed + hung + corrupted``
+        (TaskError declaration bugs abort the run and are deliberately
+        outside the attempt accounting)."""
+        out: Dict[str, Dict[str, Any]] = {}
+        with self._lock:
+            for m in self.members:
+                with m.env._lock:
+                    out[m.name] = {"capacity": m.capacity,
+                                   "completed": m.completed,
+                                   "drain_rate": (None if m.busy_s == 0.0
+                                                  else round(m.drain_rate(), 3)),
+                                   **dataclasses.asdict(m.env.stats)}
+        return out
 
     def _pick(self, exclude: frozenset = frozenset(),
               k: int = 1) -> List[_Member]:
@@ -278,10 +289,15 @@ class EnvironmentPool:
         err: Optional[BaseException] = None
         with self._lock:
             m.inflight += 1
+        # Every attempt counts as submitted — not only the winners —
+        # otherwise per-member provenance breaks the invariant
+        # submitted == completed + failed + hung + corrupted
+        # (attempt_once bumps the three failure counters itself).
+        with m.env._lock:
+            m.env.stats.submitted += 1
         try:
             out = m.env.attempt_once(task, context, attempt=round_i)
             with m.env._lock:
-                m.env.stats.submitted += 1
                 m.env.stats.completed += 1
             return out
         except TaskError as e:
@@ -358,6 +374,10 @@ class EnvironmentPool:
         ctx_done = [0]
         fatal: List[BaseException] = []
         cond = threading.Condition()
+        # Exposed for the lane-accounting regression tests only: lets a
+        # test observe lane_running after a fatal abort without reaching
+        # into worker threads. Overwritten by each map_explore call.
+        self._debug_lane_running = lane_running
         self.stats.inc(submitted=n, in_flight=n)
 
         # per-CALL deques: this fan-out's lanes are invisible to any other
@@ -379,19 +399,30 @@ class EnvironmentPool:
                     # batched program (MeshEnvironment vmap lanes)
                     with self._lock:
                         m.inflight += 1
+                    batch_ok = False
                     try:
                         outs = m.env.map_explore(task, ctxs)
+                        batch_ok = True
                     finally:
+                        # A raised batch must NOT be credited a completion:
+                        # drain_rate() = completed / busy_s steers the
+                        # balancer, and crediting failures would rank a
+                        # broken member as the fastest drain.
                         with self._lock:
                             m.inflight -= 1
                             m.busy_s += time.monotonic() - t0
-                            m.completed += 1
+                            if batch_ok:
+                                m.completed += 1
                 else:
                     outs = [self._attempt_on(m, task, c, lane_attempts[idx],
                                              {"attempts": []}) for c in ctxs]
                 ok = True
             except TaskError as e:
                 with cond:
+                    # lane_running gates speculative duplication
+                    # (lane_running[i] < self.speculative): every exit path
+                    # must undo the worker's increment or the slot leaks.
+                    lane_running[idx] -= 1
                     fatal.append(e)
                     cond.notify_all()
                 return

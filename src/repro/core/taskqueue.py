@@ -118,9 +118,16 @@ class TaskQueue:
         # they are not pushed on the heap until a payload arrives.
 
     def _log(self, rec: Dict[str, Any]) -> None:
-        if self._journal_f is not None:
+        # Callers hold self._cond, but guard the close() race anyway: a
+        # live worker finishing a claim as the queue shuts down must drop
+        # its journal line, not raise "I/O operation on closed file".
+        if self._closed or self._journal_f is None:
+            return
+        try:
             self._journal_f.write(json.dumps(rec, sort_keys=True) + "\n")
             self._journal_f.flush()
+        except ValueError:                 # closed underneath us
+            pass
 
     # -------------------------------------------------------------- submission
     def submit(self, experiment_id: str, task_id: str, priority: float = 0.0,
@@ -170,13 +177,17 @@ class TaskQueue:
             for tid, pri in priorities.items():
                 key = f"{experiment_id}/{tid}"
                 e = self._entries.get(key)
-                if e is None or e.priority == pri:
+                # Non-pending entries keep both their state AND their
+                # priority: re-scoring a running/done/failed entry would
+                # journal a mutation the docstring promises never happens
+                # (and a replay would resurrect it with the wrong rank).
+                if e is None or e.state != PENDING or e.priority == pri:
                     continue
                 e.priority = float(pri)
                 self._log({"op": "priority", "key": key,
                            "priority": e.priority})
                 n += 1
-                if e.state == PENDING and e.task is not None:
+                if e.task is not None:
                     # lazy invalidation: stale heap items are skipped at pop
                     heapq.heappush(self._heap, (-e.priority, e.seq, key))
             if n:

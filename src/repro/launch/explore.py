@@ -23,7 +23,8 @@ from repro import checkpoint
 from repro.ants import simulate_batch
 from repro.configs.ants_netlogo import BOUNDS, CONFIG, REDUCED
 from repro.core import (Context, EnvironmentPool, FaultSpec,
-                        LocalEnvironment, SavePopulationHook)
+                        LocalEnvironment, SavePopulationHook,
+                        make_device_members)
 from repro.core.cache import hash_value
 from repro.core.scheduler import RunRecord, TaskRecord, _utcnow
 from repro.evolution import (NSGA2Config, ga, init_island_state, make_epoch,
@@ -37,17 +38,31 @@ from repro.runtime import sharding as shd
 
 def make_init_pool(fault_rate: float = 0.0, *, workers: int = 3,
                    capacity: int = 2, retries: int = 8,
-                   backoff_s: float = 0.05,
-                   timeout_s: float = None) -> EnvironmentPool:
+                   backoff_s: float = 0.05, timeout_s: float = None,
+                   pool_devices: int = 0) -> EnvironmentPool:
     """THE local evaluation-pool factory (drivers, benches, and the
     service mode all build their pools here): a few heterogeneous local
     workers, optionally with an injected per-attempt failure rate (the
-    paper's unreliable-EGI regime, reproduced on one host)."""
-    envs = [LocalEnvironment(
-        name=f"worker{i}", capacity=capacity, timeout_s=timeout_s,
-        faults=(FaultSpec(fail_rate=fault_rate, seed=i)
-                if fault_rate > 0 else None))
-        for i in range(workers)]
+    paper's unreliable-EGI regime, reproduced on one host).
+
+    ``pool_devices=k`` switches the members from host threads to k
+    :class:`~repro.core.environment.DeviceEnvironment`s over disjoint
+    subsets of the local devices, so the streaming init and surrogate
+    fan-outs scale with device count (run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to try it on
+    one CPU host). ``workers``/``capacity`` are ignored in that mode —
+    member count is k and capacity defaults per device set."""
+    if pool_devices:
+        envs = make_device_members(
+            None, pool_devices, timeout_s=timeout_s,
+            faults=((lambda i: FaultSpec(fail_rate=fault_rate, seed=i))
+                    if fault_rate > 0 else None))
+    else:
+        envs = [LocalEnvironment(
+            name=f"worker{i}", capacity=capacity, timeout_s=timeout_s,
+            faults=(FaultSpec(fail_rate=fault_rate, seed=i)
+                    if fault_rate > 0 else None))
+            for i in range(workers)]
     return EnvironmentPool(envs, retries=retries, backoff_s=backoff_s)
 
 
@@ -58,7 +73,7 @@ def calibrate(*, reduced: bool = True, n_islands: int = 8, mu: int = 16,
               pipeline: bool = False, reseed_frac: float = 0.5,
               epochs_per_superstep: int = 0, init_population: int = 0,
               init_chunk: int = 2048, fault_rate: float = 0.0,
-              printer=print):
+              pool_devices: int = 0, printer=print):
     ants_cfg = REDUCED if reduced else CONFIG
     ga_cfg = NSGA2Config(mu=mu, genome_dim=2, bounds=BOUNDS, n_objectives=3)
     eval_fn = replicated_batch(
@@ -132,7 +147,7 @@ def calibrate(*, reduced: bool = True, n_islands: int = 8, mu: int = 16,
                 f"--init-population must cover the island populations: "
                 f"need >= n_islands*mu = {n_islands * mu}, "
                 f"got {init_population}")
-        pool = make_init_pool(fault_rate)
+        pool = make_init_pool(fault_rate, pool_devices=pool_devices)
         try:
             sres = ga.evaluate_population_streaming(
                 ga_cfg, eval_fn, 0, n_total=init_population,
@@ -223,6 +238,7 @@ def ants_scalar_eval(reduced: bool = True, replicates: int = 3,
 def calibrate_surrogate(*, reduced: bool = True, rounds: int = 8, q: int = 8,
                         n_init: int = 16, replicates: int = 3,
                         acquisition: str = "qei", fault_rate: float = 0.0,
+                        pool_devices: int = 0,
                         out_dir: str = "/tmp/ants_surrogate",
                         printer=print):
     """Surrogate-assisted calibration of the ants model: Sobol seeding,
@@ -235,7 +251,7 @@ def calibrate_surrogate(*, reduced: bool = True, rounds: int = 8, q: int = 8,
     eval_fn = ants_scalar_eval(reduced, replicates)
     record = RunRecord(workflow="ants-surrogate", scheduler="ask-tell",
                        environment="pool", started_at=_utcnow())
-    pool = make_init_pool(fault_rate)
+    pool = make_init_pool(fault_rate, pool_devices=pool_devices)
     t0 = time.time()
     try:
         res = run_surrogate(
@@ -281,6 +297,7 @@ def ants_mo_eval(reduced: bool = True, replicates: int = 3):
 def calibrate_surrogate_mo(*, reduced: bool = True, rounds: int = 8,
                            q: int = 8, n_init: int = 16,
                            replicates: int = 3, fault_rate: float = 0.0,
+                           pool_devices: int = 0,
                            out_dir: str = "/tmp/ants_surrogate_mo",
                            printer=print):
     """Multi-objective surrogate calibration: per-objective GPs + qEHVI
@@ -294,7 +311,7 @@ def calibrate_surrogate_mo(*, reduced: bool = True, rounds: int = 8,
     eval_fn = ants_mo_eval(reduced, replicates)
     record = RunRecord(workflow="ants-surrogate-mo", scheduler="ask-tell",
                        environment="pool", started_at=_utcnow())
-    pool = make_init_pool(fault_rate)
+    pool = make_init_pool(fault_rate, pool_devices=pool_devices)
     t0 = time.time()
     try:
         res = run_surrogate_mo(
@@ -329,7 +346,7 @@ def calibrate_surrogate_mo(*, reduced: bool = True, rounds: int = 8,
 def calibrate_service(*, reduced: bool = True, init_population: int = 2048,
                       init_chunk: int = 256, rounds: int = 4, q: int = 8,
                       n_init: int = 16, replicates: int = 3,
-                      fault_rate: float = 0.0,
+                      fault_rate: float = 0.0, pool_devices: int = 0,
                       out_dir: str = "/tmp/ants_service", printer=print):
     """Service mode: TWO experiments — a streaming GA-population init and a
     surrogate calibration — run *concurrently* as tenants of ONE
@@ -351,7 +368,7 @@ def calibrate_service(*, reduced: bool = True, init_population: int = 2048,
     sur_cfg = SurrogateConfig(bounds=BOUNDS, q=q, n_init=n_init, seed=0)
     sur_eval = ants_scalar_eval(reduced, replicates)
 
-    pool = make_init_pool(fault_rate)
+    pool = make_init_pool(fault_rate, pool_devices=pool_devices)
     service = ExplorationService(
         pool, cache=os.path.join(out_dir, "cache"),
         journal=os.path.join(out_dir, "queue.jsonl"))
@@ -471,6 +488,12 @@ def main():
     ap.add_argument("--fault-rate", type=float, default=0.0,
                     help="injected per-attempt job-failure rate for the "
                          "init pool (chaos mode; results stay bit-exact)")
+    ap.add_argument("--pool-devices", type=int, default=0,
+                    help="partition the local devices into this many "
+                         "disjoint DeviceEnvironment pool members (0 = "
+                         "thread-backed members on the default device); "
+                         "the streaming init / surrogate fan-outs then "
+                         "scale with device count")
     ap.add_argument("--rounds", type=int, default=8,
                     help="surrogate ask/tell rounds (of --q proposals each)")
     ap.add_argument("--q", type=int, default=8,
@@ -496,20 +519,25 @@ def main():
                           init_chunk=min(args.init_chunk, 256),
                           rounds=args.rounds, q=args.q, n_init=args.n_init,
                           replicates=args.replicates,
-                          fault_rate=args.fault_rate, out_dir=args.out)
+                          fault_rate=args.fault_rate,
+                          pool_devices=args.pool_devices, out_dir=args.out)
         return
     if args.method == "surrogate-mo":
         calibrate_surrogate_mo(reduced=args.reduced, rounds=args.rounds,
                                q=args.q, n_init=args.n_init,
                                replicates=args.replicates,
-                               fault_rate=args.fault_rate, out_dir=args.out)
+                               fault_rate=args.fault_rate,
+                               pool_devices=args.pool_devices,
+                               out_dir=args.out)
         return
     if args.method == "surrogate":
         calibrate_surrogate(reduced=args.reduced, rounds=args.rounds,
                             q=args.q, n_init=args.n_init,
                             replicates=args.replicates,
                             acquisition=args.acquisition,
-                            fault_rate=args.fault_rate, out_dir=args.out)
+                            fault_rate=args.fault_rate,
+                            pool_devices=args.pool_devices,
+                            out_dir=args.out)
         return
     calibrate(reduced=args.reduced, n_islands=args.islands, mu=args.mu,
               lam=args.lam, steps_per_epoch=args.steps_per_epoch,
@@ -518,7 +546,7 @@ def main():
               epochs_per_superstep=args.superstep,
               init_population=args.init_population,
               init_chunk=args.init_chunk, fault_rate=args.fault_rate,
-              out_dir=args.out)
+              pool_devices=args.pool_devices, out_dir=args.out)
 
 
 if __name__ == "__main__":

@@ -18,7 +18,8 @@ import numpy as np
 import pytest
 
 from repro.core import (Capsule, Context, EnvironmentPool, FaultSpec,
-                        LocalEnvironment, PyTask, TaskError, Val, puzzle)
+                        JaxTask, LocalEnvironment, PyTask, TaskError, Val,
+                        puzzle)
 from repro.core.faults import corrupt_output
 
 x = Val("x", float)
@@ -128,6 +129,7 @@ def test_pool_routes_around_fail_always_member():
     assert ("good", "ok") in envs
     assert all(o == "fail" for e, o in envs if e == "bad")
     assert pool.stats.resubmissions == sum(o != "ok" for _, o in envs)
+    assert_member_invariant(pool)
     pool.shutdown()
 
 
@@ -141,6 +143,7 @@ def test_pool_map_explore_bit_exact_under_30pct_failures():
     got = [c["y"] for c in pool.map_explore(SQ, ctxs)]
     assert got == ref
     assert pool.stats.completed == len(ctxs)
+    assert_member_invariant(pool)
     pool.shutdown()
 
 
@@ -256,6 +259,83 @@ def test_pool_single_member_equals_bare_environment():
 
 
 # ---------------------------------------------------------------------------
+# balancer accounting regressions (ISSUE 10 satellites)
+# ---------------------------------------------------------------------------
+def assert_member_invariant(pool):
+    """Per-member provenance must balance: every attempt that was submitted
+    ended as exactly one of completed/failed/hung/corrupted."""
+    for name, s in pool.member_stats().items():
+        assert s["submitted"] == (s["completed"] + s["failed"]
+                                  + s["hung"] + s["corrupted"]), \
+            f"member {name} attempt accounting is out of balance: {s}"
+
+
+class _BrokenBatch(LocalEnvironment):
+    """Fault-free (faults=None) member whose batched lane path always
+    raises — the shape of a device member with a broken runtime."""
+
+    def map_explore(self, task, contexts):
+        raise RuntimeError("injected batched-lane failure")
+
+
+def test_failed_batched_lane_not_credited_toward_drain_rate():
+    """Regression: the batched-jax lane path used to bump ``m.completed``
+    in a ``finally``, so a member whose batch RAISED was still credited —
+    inflating drain_rate() and steering the balancer toward the broken
+    member. A failing member's drain rate must never exceed a healthy
+    one's."""
+    sq_jax = JaxTask("sqj", lambda x: {"y": x * x}, inputs=(x,),
+                     outputs=(y,))
+    broken = _BrokenBatch(name="broken", capacity=2)
+    good = LocalEnvironment(name="good", capacity=2)
+    pool = make_pool(broken, good, retries=6, lane_size=4)
+    ctxs = [Context(x=float(i)) for i in range(16)]
+    got = [c["y"] for c in pool.map_explore(sq_jax, ctxs)]
+    assert got == [float(i) ** 2 for i in range(16)]
+    b = next(m for m in pool.members if m.name == "broken")
+    g = next(m for m in pool.members if m.name == "good")
+    assert b.completed == 0, "a raised batch must not count as completed"
+    assert b.busy_s > 0.0, "the failed batches did consume the member"
+    assert b.drain_rate() <= g.drain_rate()
+    pool.shutdown()
+
+
+def test_map_explore_taskerror_releases_lane_running_slot():
+    """Regression: run_lane's TaskError early-return skipped the
+    ``lane_running`` decrement, leaking the counter that gates speculative
+    duplication. Every exit path must release the slot."""
+    bad = PyTask("bad", lambda ctx: {}, inputs=(x,), outputs=(y,))
+    pool = make_pool(LocalEnvironment(name="solo", capacity=1),
+                     lane_size=4, speculative=2)
+    with pytest.raises(TaskError, match="missing outputs"):
+        pool.map_explore(bad, [Context(x=float(i)) for i in range(4)])
+    # one member / one slot / one lane: the aborting run_lane is the only
+    # writer, so the counter state after the raise is deterministic
+    assert pool._debug_lane_running == [0]
+    pool.shutdown()
+
+
+def test_member_stats_count_failed_attempts_as_submitted():
+    """Regression: ``_attempt_on`` bumped submitted/completed only on
+    success, so failed attempts vanished from per-member provenance and
+    ``submitted == completed + failed + hung + corrupted`` never held on
+    a flaky member."""
+    flaky = LocalEnvironment(name="flaky", capacity=2,
+                             faults=FaultSpec(fail_rate=1.0, fail_limit=2))
+    stable = LocalEnvironment(name="stable", capacity=2)
+    pool = make_pool(flaky, stable, retries=6)
+    for i in range(6):
+        assert pool.submit(SQ, Context(x=float(i)))["y"] == float(i) ** 2
+    ms = pool.member_stats()
+    fs = ms["flaky"]
+    assert fs["failed"] > 0
+    assert fs["submitted"] == fs["completed"] + fs["failed"], \
+        "failed attempts must count as submitted"
+    assert_member_invariant(pool)
+    pool.shutdown()
+
+
+# ---------------------------------------------------------------------------
 # scheduler-level: whole workflows on a chaotic pool
 # ---------------------------------------------------------------------------
 def _exploration_workflow():
@@ -346,6 +426,7 @@ def test_streaming_init_bit_exact_under_failures_hangs_and_corruption():
     assert np.array_equal(clean.objectives, chaos.objectives)
     assert np.array_equal(clean.genomes, chaos.genomes)
     assert chaos.attempts >= chaos.chunks_total
+    assert_member_invariant(pool)
     pool.shutdown()
 
 

@@ -25,6 +25,8 @@ built on top of it:
 Injected hangs are bounded and interruptible, so the suite cannot wedge
 even without pytest-timeout; CI runs it under ``--timeout`` regardless.
 """
+import json
+import os
 import threading
 import time
 
@@ -343,9 +345,64 @@ def test_taskqueue_update_priorities_reranks_pending_only():
         q.submit("e", tid, float(i), SQ, Context(x=float(i)))
     first = q.pop_next(timeout=0.1)         # t3 (highest) now running
     assert first.task_id == "t3"
-    assert q.update_priorities("e", {"t0": 10.0, "t3": 99.0}) == 2
+    # only the pending t0 counts: the running t3 is skipped entirely
+    assert q.update_priorities("e", {"t0": 10.0, "t3": 99.0}) == 1
     assert q.pop_next(timeout=0.1).task_id == "t0"   # re-ranked up
     assert first.state == "running"         # running entry untouched
+    assert first.priority == 3.0            # ...including its priority
+
+
+def test_taskqueue_update_priorities_never_mutates_non_pending(tmp_path):
+    """Pin: running/done/failed entries keep state AND priority, and no
+    priority op for them ever reaches the journal (a replay would
+    otherwise resurrect them with the wrong rank)."""
+    journal = str(tmp_path / "queue.jsonl")
+    q = TaskQueue(journal)
+    for i in range(4):
+        q.submit("e", f"t{i}", float(i), SQ, Context(x=float(i)))
+    running = q.pop_next(timeout=0.1)               # t3
+    finished = q.pop_next(timeout=0.1)              # t2
+    q.mark_done(finished)
+    failed = q.pop_next(timeout=0.1)                # t1
+    q.mark_done(failed, ok=False, error="boom")
+    assert q.update_priorities(
+        "e", {"t0": 7.0, "t1": 50.0, "t2": 60.0, "t3": 70.0}) == 1
+    assert (running.priority, finished.priority, failed.priority) == \
+        (3.0, 2.0, 1.0)
+    q.close()
+    with open(journal) as f:
+        pri_ops = [json.loads(ln) for ln in f if '"priority"' in ln
+                   and json.loads(ln)["op"] == "priority"]
+    assert [(r["key"], r["priority"]) for r in pri_ops] == [("e/t0", 7.0)]
+    # and the journal replays to the untouched priorities
+    q2 = TaskQueue(journal)
+    assert q2.get("e", "t3").priority == 3.0
+    assert q2.get("e", "t0").priority == 7.0
+    q2.close()
+
+
+def test_taskqueue_log_survives_close_race():
+    """Pin: a live worker journaling after close() must not raise from
+    the closed journal file — the line is dropped, not exploded."""
+    q = TaskQueue()                          # in-memory: exercises guard
+    q.submit("e", "t", 1.0, SQ, Context(x=1.0))
+    entry = q.pop_next(timeout=0.1)
+    q.close()
+    q.mark_done(entry)                       # journals after close: no raise
+    assert entry.state == "done"
+
+    # and with a real journal file closed underneath a straggler
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        q = TaskQueue(os.path.join(d, "q.jsonl"))
+        q.submit("e", "t", 1.0, SQ, Context(x=1.0))
+        entry = q.pop_next(timeout=0.1)
+        f = q._journal_f
+        q.close()
+        assert f.closed
+        q.mark_done(entry)                   # guarded: silently dropped
+        q.update_priorities("e", {"t": 9.0})
+        assert entry.state == "done"
 
 
 def test_taskqueue_idempotent_resubmit_and_done():

@@ -10,7 +10,10 @@ artifact:
 - carries a ``git_sha`` that is unknown, or not an ancestor of HEAD
   (stale results from an abandoned branch, or a sha that never existed), or
 - has a ``bandit_router_throughput`` row missing its structured ``regret``
-  breakdown (cumulative / per-request halves / oracle arm).
+  breakdown (cumulative / per-request halves / oracle arm), or
+- has ``egi_200k_init_{k}dev`` device-scaling rows without the 1-device
+  anchor, or with a derived string that does not assert bit-exactness
+  (the scaling claim is only honest relative to a bit-identical 1dev run).
 
 Regeneration discipline: commit the code change first, run
 ``python benchmarks/run.py --json BENCH_results.json`` on the clean tree,
@@ -70,6 +73,21 @@ def check(path):
             return fail(
                 f"{path} bandit_router_throughput regret has no "
                 "oracle_arm")
+    dev_rows = [k for k in benchmarks
+                if k.startswith("egi_200k_init_") and k.endswith("dev")]
+    if dev_rows:
+        if "egi_200k_init_1dev" not in dev_rows:
+            return fail(
+                f"{path} has device-scaling rows {sorted(dev_rows)} but "
+                "no egi_200k_init_1dev anchor — speedups are relative to "
+                "the 1-device run")
+        for k in dev_rows:
+            derived = str(benchmarks[k].get("derived", ""))
+            if "bit_exact_True" not in derived:
+                return fail(
+                    f"{path} {k} does not assert bit_exact_True — the "
+                    "device-set scaling claim requires digest equality "
+                    "with the thread-member baseline")
     n = len(benchmarks)
     print(f"[bench-check] OK ({n} rows at {sha[:12]}, "
           f"schema {payload.get('schema')})")
